@@ -1,0 +1,85 @@
+"""Aggregation-layer benches: fold strategies, grad accumulation, metric
+monoids, gradient compression — each 'derived' column reports the wire/byte
+quantity the paper's principle reduces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fold_map, monoids, scan_fold, tree_fold
+from repro.core.aggregation import allreduce_wire_bytes, grad_accum_fold, tree_bytes
+from repro.optim.compress import (compressed_bytes, init_error_state,
+                                  int8_compress, topk_compress)
+from .common import row, time_fn
+
+
+def bench_fold_strategies(n: int = 4096, d: int = 256):
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    t = jax.jit(lambda x: tree_fold(monoids.sum_, x))
+    s = jax.jit(lambda x: scan_fold(monoids.sum_, x))
+    row("fold/tree(log-depth)", time_fn(t, xs), f"depth={int(np.ceil(np.log2(n)))}")
+    row("fold/scan(in-mapper)", time_fn(s, xs), f"depth={n};live_valsB={d*4}")
+
+
+def bench_grad_accum(mb: int = 8, dim: int = 1 << 16):
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))
+    data = jnp.asarray(rng.normal(size=(mb, 32, dim)).astype(np.float32) / dim**0.5)
+
+    def lg(p, b):
+        l, g = jax.value_and_grad(lambda q: jnp.mean(jnp.square(b @ q)))(p)
+        return {"loss": l}, g
+
+    fn = jax.jit(lambda p, d: grad_accum_fold(lg, p, d))
+    us = time_fn(fn, w, data)
+    row("grad_accum/scan_fold", us,
+        f"microbatches={mb};materialized_gradsB={dim*4}(1 copy, not {mb})")
+
+
+def bench_metric_monoid_fusion(n_stats: int = 6):
+    """Product monoid: one combine for many stats vs one combine each."""
+    vals = {f"s{i}": monoids.mean.lift(jnp.float32(i)) for i in range(n_stats)}
+    prod = monoids.product(**{f"s{i}": monoids.mean for i in range(n_stats)})
+    one = jax.jit(lambda a, b: prod.combine(a, b))
+    us = time_fn(one, vals, vals)
+    nbytes = tree_bytes(vals)
+    row("metrics/product_monoid", us,
+        f"collectives=1;payloadB={nbytes};vs={n_stats}_separate_psums")
+
+
+def bench_hierarchical_allreduce_model(nbytes: int = 1 << 30):
+    """Wire-byte model of flat vs hierarchical cross-pod gradient reduction
+    (2 pods x 256 chips, ICI ring inside the pod, DCN across)."""
+    flat_dcn = allreduce_wire_bytes(nbytes, 512, algorithm="ring")
+    hier_dcn = allreduce_wire_bytes(nbytes // 256, 2, algorithm="ring")
+    row("grad_reduce/flat_512way", 0.0, f"dcn_bytes={flat_dcn}")
+    row("grad_reduce/hierarchical", 0.0,
+        f"dcn_bytes={hier_dcn};reduction={flat_dcn/max(hier_dcn,1):.0f}x")
+
+
+def bench_compression(dim: int = 1 << 20):
+    rng = np.random.default_rng(2)
+    g = {"w": jnp.asarray(rng.normal(size=(dim,)).astype(np.float32))}
+    err = init_error_state(g)
+    tk = jax.jit(lambda g, e: topk_compress(g, e, ratio=0.01))
+    i8 = jax.jit(int8_compress)
+    us_tk = time_fn(tk, g, err)
+    us_i8 = time_fn(i8, g, err)
+    ctk, _ = tk(g, err)
+    ci8, _ = i8(g, err)
+    row("compress/topk_ef(1%)", us_tk,
+        f"bytes={compressed_bytes(ctk)};ratio={dim*4/compressed_bytes(ctk):.1f}x")
+    row("compress/int8_ef", us_i8,
+        f"bytes={compressed_bytes(ci8)};ratio={dim*4/compressed_bytes(ci8):.1f}x")
+
+
+def main():
+    bench_fold_strategies()
+    bench_grad_accum()
+    bench_metric_monoid_fusion()
+    bench_hierarchical_allreduce_model()
+    bench_compression()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""The paper's central efficiency claim, measured: Algorithms 1 vs 3 vs 4 on
+mean-by-key — time per call, intermediate values materialized, shuffle bytes
+(MapReduce cost model) and XLA collective bytes (TPU cost model)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import STRATEGIES, average_by_key_job, word_count_job
+from .common import row, time_fn
+
+
+def bench_mean_by_key(n: int = 1 << 14, keys: int = 64, shards: int = 8):
+    rng = np.random.default_rng(0)
+    records = {"key": jnp.asarray(rng.integers(0, keys, n).astype(np.int32)),
+               "value": jnp.asarray(rng.normal(size=n).astype(np.float32))}
+    job = average_by_key_job(keys)
+    for strat in STRATEGIES:
+        fn = jax.jit(lambda r, s=strat: job.run_local(r, strategy=s,
+                                                      num_shards=shards))
+        us = time_fn(fn, records)
+        st = job.stats(records, strategy=strat, num_shards=shards)
+        row(f"mean_by_key/{strat}", us,
+            f"inter={st.intermediate_values};shuffleB={st.shuffle_bytes_mapreduce};"
+            f"xlaB={st.shuffle_bytes_xla};reduction={st.reduction_vs_naive():.1f}x")
+
+
+def bench_word_count(n: int = 1 << 15, vocab: int = 1024, shards: int = 8):
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, vocab, n).astype(np.int32))
+    job = word_count_job(vocab)
+    for strat in STRATEGIES:
+        fn = jax.jit(lambda t, s=strat: job.run_local(t, strategy=s,
+                                                      num_shards=shards))
+        us = time_fn(fn, toks)
+        st = job.stats(toks, strategy=strat, num_shards=shards)
+        row(f"word_count/{strat}", us,
+            f"shuffleB={st.shuffle_bytes_mapreduce};"
+            f"reduction={st.reduction_vs_naive():.1f}x")
+
+
+def main():
+    bench_mean_by_key()
+    bench_word_count()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Training-step throughput on the smoke configs (CPU wall-clock — the
+per-arch structural numbers for the real mesh come from the roofline table)."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.optim import init_opt_state
+from .common import row
+
+
+def bench_arch(arch: str, steps: int = 3, B: int = 4, S: int = 64):
+    cfg = get_config(arch, smoke=True)
+    mesh = make_host_mesh()
+    built = make_train_step(cfg, mesh, ShapeCell("b", "train", S, B),
+                            donate=False)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    from repro.configs import context_spec
+    spec = context_spec(cfg, B)
+    if spec is not None:
+        batch["context"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B,) + spec.shape[1:], cfg.dtype)
+    jax.block_until_ready(built.fn(params, opt, batch))  # compile
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        p2, o2, m = built.fn(params, opt, batch)
+        jax.block_until_ready(m["loss"])
+    us = (time.perf_counter() - t0) / steps * 1e6
+    row(f"train_step/{arch}(smoke)", us,
+        f"tok_s={B*S/(us/1e6):.0f};loss={float(m['loss']):.3f}")
+
+
+def main():
+    for arch in ("qwen3-0.6b", "gemma3-1b", "jamba-v0.1-52b",
+                 "deepseek-v2-236b", "xlstm-1.3b", "whisper-small"):
+        bench_arch(arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Timing harness for the benchmark suite (CSV: name,us_per_call,derived)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time per call in microseconds (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def row(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}")

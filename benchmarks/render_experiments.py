@@ -1,0 +1,81 @@
+"""Render the EXPERIMENTS.md tables from the dry-run JSONs.
+
+  PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(name):
+    p = os.path.join(RESULTS, name)
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return json.load(f)
+
+
+def fmt_row(r):
+    rf = r["roofline"]
+    m = r["memory_analysis"]
+    return (f"| {r['arch']} | {r['shape']} | {rf['dominant']} "
+            f"| {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+            f"| {rf['collective_s']:.3f} "
+            f"| {rf.get('flash_sub_memory_s', rf['memory_s']):.3f} "
+            f"| {rf['useful_flops_ratio']:.2f} "
+            f"| {100*rf['roofline_fraction']:.2f}% "
+            f"| {m.get('total_hbm_bytes', 0)/1e9:.1f} | {r['compile_s']:.0f}s |")
+
+
+HDR = ("| arch | shape | dominant | compute_s | memory_s | collective_s "
+       "| mem_s(flash) | useful | roof% | HBM GB/chip | compile |\n"
+       "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def table(name):
+    rows = [r for r in load(name) if "roofline" in r]
+    out = [HDR]
+    for r in rows:
+        out.append(fmt_row(r))
+    return "\n".join(out)
+
+
+def delta_table(base_name, opt_name):
+    base = {(r["arch"], r["shape"]): r for r in load(base_name) if "roofline" in r}
+    opt = {(r["arch"], r["shape"]): r for r in load(opt_name) if "roofline" in r}
+    out = ["| arch | shape | bound_s base -> opt | roof% base -> opt | Δbound |",
+           "|---|---|---|---|---|"]
+    for k in base:
+        if k not in opt:
+            continue
+        b, o = base[k]["roofline"], opt[k]["roofline"]
+        d = (b["bound_s"] - o["bound_s"]) / b["bound_s"] * 100
+        out.append(f"| {k[0]} | {k[1]} | {b['bound_s']:.3f} -> {o['bound_s']:.3f} "
+                   f"| {100*b['roofline_fraction']:.2f}% -> "
+                   f"{100*o['roofline_fraction']:.2f}% | {d:+.1f}% |")
+    return "\n".join(out)
+
+
+def main():
+    print("### Baseline single-pod (16x16), paper-faithful initial program "
+          "(--f32-chains)\n")
+    print(table("baseline_single_pod.json"))
+    print("\n### Optimized single-pod (16x16), final defaults\n")
+    print(table("opt1_single_pod.json"))
+    print("\n### Multi-pod (2x16x16 = 512 chips), final defaults\n")
+    print(table("opt1_multi_pod.json"))
+    print("\n### Baseline -> optimized deltas (bound term)\n")
+    print(delta_table("baseline_single_pod.json", "opt1_single_pod.json"))
+    print("\n### Hillclimb cells, best variants\n")
+    for f in ("hillclimb_llama_seqpar.json", "hillclimb_dsv2_mb8.json"):
+        rows = [r for r in load(f) if "roofline" in r]
+        if rows:
+            print(f"\n{f} ({rows[0]['options']}):\n")
+            print(HDR)
+            for r in rows:
+                print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

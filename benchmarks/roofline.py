@@ -1,0 +1,62 @@
+"""Render the §Roofline table from the dry-run JSONs (benchmarks/results/).
+
+  PYTHONPATH=src python -m benchmarks.roofline [--results DIR] [--md]
+
+The dry-run sweep itself is `python -m repro.launch.dryrun --arch all
+--shape all --out benchmarks/results/baseline_single_pod.json` (and
+--multi-pod for the 512-chip pass).
+"""
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(rows, md=False):
+    hdr = ["arch", "shape", "mesh", "dominant", "compute_s", "memory_s",
+           "collective_s", "useful", "roofline_frac", "hbm_GB/chip", "compile_s"]
+    lines = []
+    for r in rows:
+        if "roofline" not in r:
+            if r.get("skipped"):
+                continue
+            lines.append([r.get("arch"), r.get("shape"), "-", "ERROR",
+                          r.get("error", "")[:40], "", "", "", "", "", ""])
+            continue
+        rf = r["roofline"]
+        lines.append([
+            r["arch"], r["shape"], r["mesh"], rf["dominant"],
+            f"{rf['compute_s']:.4f}", f"{rf['memory_s']:.4f}",
+            f"{rf['collective_s']:.4f}", f"{rf['useful_flops_ratio']:.2f}",
+            f"{100 * rf['roofline_fraction']:.2f}%",
+            f"{r['memory_analysis'].get('total_hbm_bytes', 0) / 1e9:.1f}",
+            f"{r['compile_s']:.1f}",
+        ])
+    if md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+        for l in lines:
+            print("| " + " | ".join(str(x) for x in l) + " |")
+    else:
+        print(",".join(hdr))
+        for l in lines:
+            print(",".join(str(x) for x in l))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=RESULTS)
+    ap.add_argument("--file", default="baseline_single_pod.json")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args(argv)
+    render(load(os.path.join(args.results, args.file)), md=args.md)
+
+
+if __name__ == "__main__":
+    main()

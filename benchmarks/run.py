@@ -1,0 +1,26 @@
+"""Benchmark suite entry point. One section per paper artifact/table.
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline table (the per-
+(arch x shape x mesh) structural numbers) is rendered separately by
+``python -m benchmarks.roofline`` from the dry-run JSONs.
+"""
+from . import (bench_aggregation, bench_kernels, bench_mapreduce,
+               bench_sketches, bench_train)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    print("# -- Algorithms 1/3/4: mean-by-key & word count ------------------")
+    bench_mapreduce.main()
+    print("# -- Pallas kernels vs XLA refs (interpret mode on CPU) ----------")
+    bench_kernels.main()
+    print("# -- aggregation layer: folds, grad accum, metrics, compression --")
+    bench_aggregation.main()
+    print("# -- sketch monoids (paper section 3) ----------------------------")
+    bench_sketches.main()
+    print("# -- end-to-end train step (smoke configs, CPU) ------------------")
+    bench_train.main()
+
+
+if __name__ == "__main__":
+    main()

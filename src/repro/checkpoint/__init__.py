@@ -1,0 +1,3 @@
+"""repro.checkpoint — atomic, async, mesh-agnostic checkpoints with
+monoid-merge resume."""
+from .store import CheckpointStore

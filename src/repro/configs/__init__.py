@@ -1,0 +1,89 @@
+"""Architecture registry + assigned input-shape cells.
+
+10 assigned architectures x 4 shapes = 40 cells; ``valid_cells`` filters the
+per-spec skips (long_500k only for sub-quadratic archs; every arch here has a
+decoder so decode shapes always run). See DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig
+from . import (deepseek_v2_236b, gemma3_1b, jamba_v0p1_52b, llama3p2_vision_90b,
+               qwen2_moe_a2p7b, qwen2p5_14b, qwen3_0p6b, starcoder2_15b,
+               whisper_small, xlstm_1p3b)
+
+_MODULES = {
+    m.ARCH_ID: m for m in (
+        qwen3_0p6b, gemma3_1b, qwen2p5_14b, starcoder2_15b, jamba_v0p1_52b,
+        deepseek_v2_236b, qwen2_moe_a2p7b, whisper_small, xlstm_1p3b,
+        llama3p2_vision_90b,
+    )
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str, *, smoke: bool = False) -> ModelConfig:
+    mod = _MODULES[arch_id]
+    return mod.smoke_config() if smoke else mod.config()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+
+def valid_cells(cfg: ModelConfig) -> List[str]:
+    """Per-spec skips: long_500k needs sub-quadratic attention."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        cells.append("long_500k")
+    return cells
+
+
+def context_spec(cfg: ModelConfig, batch: int) -> Optional[jax.ShapeDtypeStruct]:
+    """Stubbed modality frontend output (audio frames / vision patches)."""
+    if cfg.family == "audio":
+        return jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        return jax.ShapeDtypeStruct((batch, cfg.num_image_tokens, cfg.d_model), cfg.dtype)
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the data inputs of one cell.
+
+    train  -> {tokens, labels[, context]}
+    prefill-> {tokens[, context]}
+    decode -> {tokens (B,1)[, context]}; the KV-cache specs are derived by the
+              launcher via eval_shape of init_cache (launch/dryrun.py).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    ctx = context_spec(cfg, B)
+    if ctx is not None:
+        specs["context"] = ctx
+    return specs

@@ -1,0 +1,34 @@
+"""xlstm-1.3b [ssm] — 48L d_model=2048 4H d_ff=0 vocab=50304; sLSTM + mLSTM
+blocks in 7:1 ratio (xLSTM[7:1]). [arXiv:2405.04517]
+
+Blocks carry their own up/down projections (mLSTM pf=2, sLSTM gated MLP
+pf=4/3) so ffn_pattern is 'none' everywhere (d_ff=0 per the assignment).
+O(1) recurrent state => runs long_500k. Chunkwise-parallel mLSTM via the
+affine-scan monoid; simplifications vs the paper are listed in DESIGN.md.
+"""
+from ..models import ModelConfig
+
+ARCH_ID = "xlstm-1.3b"
+
+_PATTERN = ("mlstm",) * 7 + ("slstm",)
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="ssm",
+        num_layers=48, d_model=2048, num_heads=4, num_kv_heads=4,
+        head_dim=512, d_ff=0, vocab_size=50304,
+        layer_pattern=_PATTERN, ffn_pattern=("none",) * 8,
+        mlstm_proj_factor=2.0, slstm_proj_factor=4.0 / 3.0,
+        subquadratic=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke", family="ssm",
+        num_layers=8, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, d_ff=0, vocab_size=512,
+        layer_pattern=_PATTERN, ffn_pattern=("none",) * 8,
+        subquadratic=True,
+    )

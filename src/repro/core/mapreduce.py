@@ -1,0 +1,316 @@
+"""The paper's MapReduce algorithms (1-5), executable on a TPU mesh.
+
+A :class:`MapReduceJob` is the paper's program model made static-shaped for
+XLA:
+
+    mapper  : record -> (key, raw_value)      key in [0, num_keys)
+    monoid  : lift/combine/identity/extract over the intermediate value
+    reducer : the monoid combine + extract (never user-written — that is
+              exactly the paper's point)
+
+Three executable strategies mirror the paper's algorithms:
+
+* ``naive``     — Algorithm 1: mappers emit every lifted pair; ALL pairs cross
+                  the wire; reducers fold.
+* ``combiner``  — Algorithm 3: lifted pairs are materialized on-device, a
+                  combiner segment-folds them into a dense per-key table
+                  before the shuffle; only ``num_keys`` values cross the wire.
+* ``in_mapper`` — Algorithm 4: the per-key table is the scan carry; lifted
+                  pairs are never materialized (O(num_keys) live values).
+
+Algorithm 2 (the combiner that changes the value type) is rejected by
+:func:`validate_combiner` — the machine-checked MapReduce contract.
+
+Hardware adaptation (DESIGN.md §2): Hadoop's disk shuffle becomes an
+``all_to_all``/``psum_scatter`` key re-partition; Hadoop's dynamic keys become
+a static key space (hash-bucketed when open — the paper's own sketches are the
+unbounded-key answer). Byte accounting reports both the MapReduce-equivalent
+shuffle bytes (pairs x bytes, the paper's cost model) and the XLA-actual
+collective bytes on this mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .monoid import Monoid, MonoidTypeError, Pytree, tree_fold
+from .aggregation import segment_fold, monoid_reduce_scatter, monoid_allreduce, tree_bytes
+
+STRATEGIES = ("naive", "combiner", "in_mapper")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShuffleStats:
+    """The paper's efficiency story in numbers (per strategy, whole job).
+
+    intermediate_values: monoid values materialized map-side (Alg 1/3: one per
+      record; Alg 4: only the table).
+    shuffle_values: monoid values that cross the wire (the sort/shuffle cost).
+    shuffle_bytes_mapreduce: shuffle_values x bytes(value) — the paper's model.
+    shuffle_bytes_xla: bytes the XLA collective actually moves on this mesh
+      (ring reduce-scatter for the dense table; all_gather for naive pairs).
+    """
+
+    strategy: str
+    num_records: int
+    num_keys: int
+    value_bytes: int
+    intermediate_values: int
+    shuffle_values: int
+    shuffle_bytes_mapreduce: int
+    shuffle_bytes_xla: int
+
+    def reduction_vs_naive(self) -> float:
+        naive = self.num_records * self.value_bytes
+        return naive / max(self.shuffle_bytes_mapreduce, 1)
+
+
+def validate_combiner(monoid: Monoid, example_value: Pytree,
+                      combiner_fn: Optional[Callable[[Pytree, Pytree], Pytree]] = None) -> None:
+    """The MapReduce combiner contract: combine must map M x M -> M.
+
+    The paper's Algorithm 2 fails this check (its combiner turns an ``int``
+    into a ``(sum, count)`` pair). We verify with ``eval_shape`` so no FLOPs
+    are spent; raises :class:`MonoidTypeError` on violation.
+    """
+    fn = combiner_fn if combiner_fn is not None else monoid.combine
+    out = jax.eval_shape(fn, example_value, example_value)
+    s_in = jax.tree_util.tree_structure(example_value)
+    s_out = jax.tree_util.tree_structure(out)
+    if s_in != s_out:
+        raise MonoidTypeError(
+            f"combiner output structure {s_out} != input value structure {s_in}: "
+            "a combiner may run zero, one, or many times, so its output type "
+            "must equal its input type (paper, Algorithm 2)."
+        )
+    for li, lo in zip(jax.tree_util.tree_leaves(example_value), jax.tree_util.tree_leaves(out)):
+        if jnp.shape(li) != lo.shape or jnp.result_type(li) != lo.dtype:
+            raise MonoidTypeError(
+                f"combiner changed leaf {jnp.shape(li)}/{jnp.result_type(li)} -> "
+                f"{lo.shape}/{lo.dtype} (paper, Algorithm 2)."
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class MapReduceJob:
+    """A static-shaped MapReduce job over a fixed key space.
+
+    mapper: record -> (key, raw_value); vmapped over the record axis.
+    monoid: the intermediate-value monoid (lift applied to raw mapper output).
+    num_keys: size of the key space (hash-bucket open key spaces).
+    """
+
+    mapper: Callable[[Pytree], Tuple[jnp.ndarray, Pytree]]
+    monoid: Monoid
+    num_keys: int
+
+    # -- map side -------------------------------------------------------------
+    def _map_records(self, records: Pytree) -> Tuple[jnp.ndarray, Pytree]:
+        keys, raws = jax.vmap(self.mapper)(records)
+        return keys.astype(jnp.int32), raws
+
+    def _local_table_combiner(self, records: Pytree) -> Pytree:
+        """Algorithm 3: materialize lifted pairs, then combiner-fold by key."""
+        keys, raws = self._map_records(records)
+        lifted = jax.vmap(self.monoid.lift)(raws)          # materialized
+        return segment_fold(self.monoid, lifted, keys, self.num_keys)
+
+    def _local_table_in_mapper(self, records: Pytree) -> Pytree:
+        """Algorithm 4: fold each record straight into the per-key table."""
+        keys, raws = self._map_records(records)
+        one = self.monoid.identity_like(
+            jax.tree_util.tree_map(lambda x: x[0],
+                                   jax.vmap(self.monoid.lift)(
+                                       jax.tree_util.tree_map(lambda x: x[:1], raws))))
+        table0 = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (self.num_keys,) + l.shape), one)
+
+        def step(table, kv):
+            k, raw = kv
+            v = self.monoid.lift(raw)
+            cur = jax.tree_util.tree_map(lambda t: t[k], table)
+            new = self.monoid.combine(cur, v)
+            return jax.tree_util.tree_map(lambda t, n: t.at[k].set(n), table, new), None
+
+        table, _ = jax.lax.scan(step, table0, (keys, raws))
+        return table
+
+    def _fold_pairs_into_table(self, keys: jnp.ndarray, lifted: Pytree) -> Pytree:
+        return segment_fold(self.monoid, lifted, keys, self.num_keys)
+
+    # -- single-host reference execution ---------------------------------------
+    def run_local(self, records: Pytree, *, strategy: str = "in_mapper",
+                  num_shards: int = 1, extract: bool = True) -> Pytree:
+        """Reference execution with ``num_shards`` simulated mappers.
+
+        Identical numerics to :meth:`run_sharded`; used by tests/benchmarks on
+        one device. Records' leading axis must divide by num_shards.
+        """
+        if strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES}")
+        n = jax.tree_util.tree_leaves(records)[0].shape[0]
+        assert n % num_shards == 0, (n, num_shards)
+        sharded = jax.tree_util.tree_map(
+            lambda x: x.reshape((num_shards, n // num_shards) + x.shape[1:]), records)
+
+        if strategy == "naive":
+            # every lifted pair survives to the "reduce" side
+            keys, raws = jax.vmap(self._map_records)(sharded)
+            lifted = jax.vmap(jax.vmap(self.monoid.lift))(raws)
+            flat_keys = keys.reshape((n,))
+            flat = jax.tree_util.tree_map(
+                lambda x: x.reshape((n,) + x.shape[2:]), lifted)
+            table = self._fold_pairs_into_table(flat_keys, flat)
+        else:
+            local = self._local_table_combiner if strategy == "combiner" \
+                else self._local_table_in_mapper
+            tables = jax.vmap(local)(sharded)              # (shards, K, ...)
+            table = tree_fold(self.monoid, tables, axis=0)
+        return self._finish(table, extract)
+
+    # -- mesh execution ---------------------------------------------------------
+    def run_sharded(self, records: Pytree, mesh: jax.sharding.Mesh, *,
+                    axis_name: str = "data", strategy: str = "in_mapper",
+                    extract: bool = True) -> Pytree:
+        """shard_map execution: local phase on each device, monoid shuffle.
+
+        records: globally-batched pytree, leading axis divisible by the axis
+        size; each device runs the map+combine phase on its shard, then the
+        dense key table is combined across devices:
+
+          naive     -> all pairs cross the wire (all_gather), receivers fold
+          combiner / in_mapper -> psum_scatter/all_to_all of the dense table
+                                  then all_gather of per-key results
+
+        The result is the full (num_keys, ...) extracted table, replicated.
+        """
+        if strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES}")
+        P = mesh.shape[axis_name]
+        spec = jax.sharding.PartitionSpec(axis_name)
+        nospec = jax.sharding.PartitionSpec()
+
+        def shard_body(recs):
+            if strategy == "naive":
+                keys, raws = self._map_records(recs)
+                lifted = jax.vmap(self.monoid.lift)(raws)
+                all_keys = jax.lax.all_gather(keys, axis_name, axis=0, tiled=True)
+                all_vals = jax.tree_util.tree_map(
+                    lambda v: jax.lax.all_gather(v, axis_name, axis=0, tiled=True),
+                    lifted)
+                table = self._fold_pairs_into_table(all_keys, all_vals)
+            else:
+                local = self._local_table_combiner if strategy == "combiner" \
+                    else self._local_table_in_mapper
+                table = local(recs)
+                if self.num_keys % P == 0:
+                    shard = monoid_reduce_scatter(self.monoid, table, axis_name)
+                    shard_leaves = jax.tree_util.tree_map(
+                        lambda v: jax.lax.all_gather(v, axis_name, axis=0, tiled=True),
+                        shard)
+                    table = shard_leaves
+                else:
+                    table = monoid_allreduce(self.monoid, table, axis_name)
+            return table
+
+        in_specs = (jax.tree_util.tree_map(lambda _: spec, records),)
+        fn = jax.shard_map(shard_body, mesh=mesh,
+                           in_specs=in_specs, out_specs=nospec,
+                           check_vma=False)
+        table = fn(records)
+        return self._finish(table, extract)
+
+    def _finish(self, table: Pytree, extract: bool) -> Pytree:
+        if not extract:
+            return table
+        return jax.vmap(self.monoid.extract)(table)
+
+    # -- accounting --------------------------------------------------------------
+    def stats(self, records: Pytree, *, strategy: str, num_shards: int) -> ShuffleStats:
+        """The paper's cost model for this job on ``num_shards`` mappers."""
+        n = jax.tree_util.tree_leaves(records)[0].shape[0]
+        one_rec = jax.tree_util.tree_map(lambda x: x[0], records)
+        _, raw_shape = jax.eval_shape(self.mapper, one_rec)
+        value_shape = jax.eval_shape(self.monoid.lift, raw_shape)
+        vbytes = tree_bytes(value_shape)
+        table_values = self.num_keys * num_shards
+
+        if strategy == "naive":
+            inter, shuffled = n, n
+            # all_gather of all pairs: each device's n/P pairs replicated P-1 times
+            xla = int(n * vbytes * (num_shards - 1) / max(num_shards, 1)) * num_shards \
+                if num_shards > 1 else 0
+        elif strategy == "combiner":
+            inter, shuffled = n + table_values, table_values
+            xla = _ring_reduce_bytes(self.num_keys * vbytes, num_shards)
+        elif strategy == "in_mapper":
+            inter, shuffled = table_values, table_values
+            xla = _ring_reduce_bytes(self.num_keys * vbytes, num_shards)
+        else:
+            raise ValueError(strategy)
+        return ShuffleStats(
+            strategy=strategy, num_records=n, num_keys=self.num_keys,
+            value_bytes=vbytes, intermediate_values=inter,
+            shuffle_values=shuffled,
+            shuffle_bytes_mapreduce=shuffled * vbytes,
+            shuffle_bytes_xla=xla,
+        )
+
+
+def _ring_reduce_bytes(nbytes: int, P: int) -> int:
+    """Total wire bytes of a ring reduce-scatter + all-gather over P devices."""
+    if P <= 1:
+        return 0
+    return int(2 * nbytes * (P - 1))
+
+
+# ---------------------------------------------------------------------------
+# The paper's running example: average of values by key (Algorithms 1/3/4)
+# ---------------------------------------------------------------------------
+
+def average_by_key_job(num_keys: int) -> MapReduceJob:
+    """Mean-by-key: the paper's running example with the (sum, count) monoid."""
+    from . import monoids
+
+    def mapper(record):
+        return record["key"], record["value"]
+
+    return MapReduceJob(mapper=mapper, monoid=monoids.mean, num_keys=num_keys)
+
+
+def algorithm2_combiner(t_and_r, _ignored):
+    """The paper's ILLEGAL Algorithm 2 combiner: int values -> (sum, count).
+
+    Provided so the test/benchmark can show the engine rejecting it.
+    """
+    return (t_and_r, jnp.ones((), jnp.int32))
+
+
+def word_count_job(vocab: int) -> MapReduceJob:
+    """The canonical MapReduce hello-world as a monoid job."""
+    from . import monoids
+
+    def mapper(token):
+        return token, jnp.ones((), jnp.int32)
+
+    return MapReduceJob(mapper=mapper, monoid=monoids.sum_, num_keys=vocab)
+
+
+def cooccurrence_stripes_job(vocab: int, window: int) -> MapReduceJob:
+    """Algorithm 5 (stripes): records are token windows; key = center word,
+    value = the stripe (dense count vector over the vocab)."""
+    from . import monoids
+
+    def mapper(win):
+        center = window  # records are (2*window+1,) token windows
+        w = win[center]
+        neigh_idx = jnp.concatenate([jnp.arange(window), jnp.arange(window + 1, 2 * window + 1)])
+        stripe = jnp.zeros((vocab,), jnp.int32).at[win[neigh_idx]].add(1)
+        return w, stripe
+
+    return MapReduceJob(mapper=mapper, monoid=monoids.stripes, num_keys=vocab)

@@ -1,0 +1,242 @@
+"""The Monoid abstraction — the paper's contribution as a composable JAX module.
+
+A monoid is ``(M, combine, identity)`` with ``combine`` associative and
+``identity`` its two-sided unit.  Following the paper we split an aggregation
+into four pieces (§2, "Monoidify!"):
+
+    lift     : X -> M        "monoidify" a raw mapper output      (r -> (r, 1))
+    combine  : M x M -> M    the associative op / combiner body   ((s,c),(s',c')) -> (s+s', c+c')
+    identity : -> M          the unit                             (0, 0)
+    extract  : M -> R        one-time post-processing (fn. 3)     (s,c) -> s/c
+
+Monoid values are arbitrary pytrees of jax arrays so they flow through jit,
+scan, collectives and checkpoints unchanged.  ``combine`` must be
+shape/structure preserving — this is exactly the MapReduce combiner contract
+(same input and output key-value type) that Algorithm 2 in the paper violates;
+we enforce it with :func:`check_structure`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _default_lift(x: Pytree) -> Pytree:
+    return x
+
+
+def _default_extract(m: Pytree) -> Pytree:
+    return m
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """An algebraic monoid over pytrees of jax arrays.
+
+    Attributes:
+      name: human-readable name (used in error messages / benchmarks).
+      combine: associative binary op ``M x M -> M``.
+      identity_fn: zero-arg callable returning the identity element. For
+        shape-polymorphic monoids (e.g. Sum over arbitrary arrays) it may
+        require an ``example`` kwarg — use :meth:`identity_like`.
+      lift: ``X -> M`` ("monoidify" a raw value). Defaults to the id function.
+      extract: ``M -> R`` one-time post-processing. Defaults to id.
+      commutative: whether combine is commutative (True for everything in the
+        zoo except explicitly-ordered monoids like ``concat``/First/Last).
+        Hierarchical reductions that reorder operands check this flag.
+      approx_equal: optional custom equality used by law checking (sketches
+        compare exactly; float monoids use allclose).
+    """
+
+    name: str
+    combine: Callable[[Pytree, Pytree], Pytree]
+    identity_fn: Callable[..., Pytree]
+    lift: Callable[[Pytree], Pytree] = _default_lift
+    extract: Callable[[Pytree], Pytree] = _default_extract
+    commutative: bool = True
+    approx_equal: Optional[Callable[[Pytree, Pytree], bool]] = None
+
+    # -- construction helpers -------------------------------------------------
+    def identity(self) -> Pytree:
+        return self.identity_fn()
+
+    def identity_like(self, example: Pytree) -> Pytree:
+        """Identity element with the shapes/dtypes of ``example``."""
+        try:
+            return self.identity_fn(example=example)
+        except TypeError:
+            return self.identity_fn()
+
+    # -- algebra --------------------------------------------------------------
+    def __call__(self, a: Pytree, b: Pytree) -> Pytree:
+        return self.combine(a, b)
+
+    def fold(self, xs: Pytree, *, axis: int = 0, lifted: bool = True) -> Pytree:
+        """Fold a stacked batch of monoid values along ``axis``.
+
+        ``xs`` is a pytree whose leaves each carry a leading (or ``axis``)
+        batch dimension; returns the monoid combine of all slices. Uses a
+        log-depth tree reduction (legal by associativity — the paper's whole
+        point) rather than a serial loop.
+        """
+        if not lifted:
+            xs = jax.vmap(self.lift, in_axes=axis, out_axes=axis)(xs)
+        return tree_fold(self, xs, axis=axis)
+
+    def equal(self, a: Pytree, b: Pytree, *, rtol: float = 1e-5, atol: float = 1e-6) -> bool:
+        if self.approx_equal is not None:
+            return bool(self.approx_equal(a, b))
+        la, sa = jax.tree_util.tree_flatten(a)
+        lb, sb = jax.tree_util.tree_flatten(b)
+        if sa != sb:
+            return False
+        for x, y in zip(la, lb):
+            x = jnp.asarray(x)
+            y = jnp.asarray(y)
+            if x.shape != y.shape:
+                return False
+            if jnp.issubdtype(x.dtype, jnp.floating) or jnp.issubdtype(x.dtype, jnp.complexfloating):
+                if not jnp.allclose(x, y, rtol=rtol, atol=atol):
+                    return False
+            else:
+                if not jnp.array_equal(x, y):
+                    return False
+        return True
+
+
+class MonoidTypeError(TypeError):
+    """Raised when a combine would change the value's pytree structure/shape.
+
+    This is the machine-checked version of the MapReduce combiner contract the
+    paper's Algorithm 2 violates (combiner output type != input type).
+    """
+
+
+def check_structure(m: Monoid, a: Pytree, b: Pytree) -> None:
+    """Verify ``combine(a, b)`` is structure & shape preserving."""
+    out = m.combine(a, b)
+    sa = jax.tree_util.tree_structure(a)
+    so = jax.tree_util.tree_structure(out)
+    if sa != so:
+        raise MonoidTypeError(
+            f"monoid {m.name!r}: combine changed pytree structure {sa} -> {so}; "
+            "a MapReduce combiner must map M x M -> M (paper, Algorithm 2)"
+        )
+    for la, lo in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(out)):
+        if jnp.shape(la) != jnp.shape(lo):
+            raise MonoidTypeError(
+                f"monoid {m.name!r}: combine changed leaf shape "
+                f"{jnp.shape(la)} -> {jnp.shape(lo)}"
+            )
+
+
+def check_laws(m: Monoid, samples: list, *, rtol: float = 1e-4, atol: float = 1e-5) -> None:
+    """Assert monoid laws on concrete samples (used by the hypothesis tests).
+
+    Laws: associativity ``(a⊕b)⊕c == a⊕(b⊕c)``; left/right identity;
+    structure preservation; commutativity if declared.
+    """
+    e = m.identity_like(samples[0]) if samples else m.identity()
+    for a in samples:
+        check_structure(m, a, a)
+        assert m.equal(m.combine(e, a), a, rtol=rtol, atol=atol), f"{m.name}: left identity failed"
+        assert m.equal(m.combine(a, e), a, rtol=rtol, atol=atol), f"{m.name}: right identity failed"
+    for a in samples:
+        for b in samples:
+            if m.commutative:
+                assert m.equal(m.combine(a, b), m.combine(b, a), rtol=rtol, atol=atol), (
+                    f"{m.name}: commutativity failed"
+                )
+            for c in samples:
+                lhs = m.combine(m.combine(a, b), c)
+                rhs = m.combine(a, m.combine(b, c))
+                assert m.equal(lhs, rhs, rtol=rtol, atol=atol), f"{m.name}: associativity failed"
+
+
+# ---------------------------------------------------------------------------
+# folds
+# ---------------------------------------------------------------------------
+
+def tree_fold(m: Monoid, xs: Pytree, *, axis: int = 0) -> Pytree:
+    """Log-depth tree reduction of stacked monoid values along ``axis``.
+
+    The batch size need not be a power of two: odd remainders are carried.
+    Tracing cost is O(log n); this is the jit-friendly combiner. For very
+    long folds with small state prefer :func:`scan_fold` (O(1) trace).
+    """
+    def move(x):
+        return jnp.moveaxis(x, axis, 0) if axis != 0 else x
+
+    xs = jax.tree_util.tree_map(move, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    if n == 0:
+        raise ValueError("tree_fold over empty batch; use identity_like instead")
+    while n > 1:
+        half = n // 2
+        # pair ADJACENT elements so the re-bracketing preserves sequence
+        # order — required for non-commutative monoids (affine_scan, concat)
+        lo = jax.tree_util.tree_map(lambda x: x[0:2 * half:2], xs)
+        hi = jax.tree_util.tree_map(lambda x: x[1:2 * half:2], xs)
+        merged = jax.vmap(m.combine)(lo, hi)
+        if n % 2:
+            tail = jax.tree_util.tree_map(lambda x: x[-1:], xs)
+            merged = jax.tree_util.tree_map(lambda a, b: jnp.concatenate([a, b], 0), merged, tail)
+            n = half + 1
+        else:
+            n = half
+        xs = merged
+    return jax.tree_util.tree_map(lambda x: x[0], xs)
+
+
+def scan_fold(m: Monoid, xs: Pytree, *, axis: int = 0, init: Optional[Pytree] = None) -> Pytree:
+    """Serial in-mapper-combining fold: O(1) trace size, O(n) depth.
+
+    This is the paper's Algorithm 4 — an accumulator held across inputs,
+    emitted once at the end.  ``init`` defaults to the identity.
+    """
+    def move(x):
+        return jnp.moveaxis(x, axis, 0) if axis != 0 else x
+
+    xs = jax.tree_util.tree_map(move, xs)
+    if init is None:
+        first = jax.tree_util.tree_map(lambda x: x[0], xs)
+        init = m.identity_like(first)
+
+    def step(acc, x):
+        return m.combine(acc, x), None
+
+    acc, _ = jax.lax.scan(step, init, xs)
+    return acc
+
+
+def fold_map(m: Monoid, fn: Callable[[Pytree], Pytree], xs: Pytree, *, axis: int = 0,
+             strategy: str = "scan") -> Pytree:
+    """map-then-fold: ``fold(lift(fn(x)) for x in xs)`` without materializing.
+
+    strategy='scan' is in-mapper combining (Algorithm 4: nothing materialized);
+    strategy='tree' materializes the lifted values then tree-reduces
+    (Algorithm 3: combiner on materialized map output).
+    """
+    if strategy == "scan":
+        def move(x):
+            return jnp.moveaxis(x, axis, 0) if axis != 0 else x
+        xs = jax.tree_util.tree_map(move, xs)
+        first = jax.tree_util.tree_map(lambda x: x[0], xs)
+        init = m.identity_like(m.lift(fn(first)))
+
+        def step(acc, x):
+            return m.combine(acc, m.lift(fn(x))), None
+
+        acc, _ = jax.lax.scan(step, init, xs)
+        return acc
+    elif strategy == "tree":
+        lifted = jax.vmap(lambda x: m.lift(fn(x)), in_axes=axis, out_axes=0)(xs)
+        return tree_fold(m, lifted, axis=0)
+    raise ValueError(f"unknown strategy {strategy!r}")

@@ -1,0 +1,492 @@
+"""The monoid zoo.
+
+Every aggregation in the framework is an instance from this module. The
+paper's own examples are all here:
+
+* ``mean`` — the running example (Algorithms 3/4): the ``(sum, count)`` pair.
+* ``stripes`` / :func:`stripe_of_window` — Algorithm 5's associative arrays
+  under element-wise sum (dense representation over a fixed vocab).
+* ``bloom_filter`` / ``count_min`` / ``hyperloglog`` — the §3 Algebird
+  sketches.
+* weight vectors under addition (SGD, Lin & Kolcz) — that is just :func:`sum_`
+  over a parameter pytree.
+
+Beyond-paper monoids used by the LM stack:
+
+* ``logsumexp`` and :func:`attn_state` — the online-softmax state; the reason
+  chunked attention / flash-decoding / ring attention are legal re-bracketings.
+* :func:`affine_scan` — linear-recurrence composition; why Mamba/mLSTM
+  parallelize via ``lax.associative_scan``.
+* ``welford`` — numerically-stable streaming mean/variance for metrics.
+
+All monoid values are pytrees of jax arrays. Shape-polymorphic monoids
+(sum/min/max/mean/...) take their shapes from ``identity_like(example)``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .monoid import Monoid, Pytree
+
+# ---------------------------------------------------------------------------
+# elementwise pytree monoids (shape-polymorphic)
+# ---------------------------------------------------------------------------
+
+def _tree_binary(op):
+    def combine(a, b):
+        return jax.tree_util.tree_map(op, a, b)
+    return combine
+
+
+def _zeros_like_identity(*, example: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.zeros_like, example)
+
+
+sum_ = Monoid(
+    name="sum",
+    combine=_tree_binary(jnp.add),
+    identity_fn=_zeros_like_identity,
+)
+# Weight vectors under addition — the SGD monoid of Lin & Kolcz (paper §3) —
+# and gradient accumulation are both `sum_` over a parameter pytree.
+grad_sum = sum_
+
+prod = Monoid(
+    name="prod",
+    combine=_tree_binary(jnp.multiply),
+    identity_fn=lambda *, example: jax.tree_util.tree_map(jnp.ones_like, example),
+)
+
+
+def _neginf_like(x):
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.full_like(x, -jnp.inf)
+    return jnp.full_like(x, jnp.iinfo(x.dtype).min)
+
+
+def _posinf_like(x):
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.full_like(x, jnp.inf)
+    return jnp.full_like(x, jnp.iinfo(x.dtype).max)
+
+
+max_ = Monoid(
+    name="max",
+    combine=_tree_binary(jnp.maximum),
+    identity_fn=lambda *, example: jax.tree_util.tree_map(_neginf_like, example),
+)
+
+min_ = Monoid(
+    name="min",
+    combine=_tree_binary(jnp.minimum),
+    identity_fn=lambda *, example: jax.tree_util.tree_map(_posinf_like, example),
+)
+
+bitwise_or = Monoid(
+    name="bitwise_or",
+    combine=_tree_binary(jnp.bitwise_or),
+    identity_fn=lambda *, example: jax.tree_util.tree_map(jnp.zeros_like, example),
+)
+
+# ---------------------------------------------------------------------------
+# mean — the paper's running example (Algorithms 3/4)
+# ---------------------------------------------------------------------------
+
+def _mean_combine(a, b):
+    (sa, ca), (sb, cb) = a, b
+    return (jax.tree_util.tree_map(jnp.add, sa, sb), ca + cb)
+
+
+def _mean_identity(*, example=None):
+    if example is None:
+        return (jnp.zeros(()), jnp.zeros((), jnp.int32))
+    s, c = example
+    return (jax.tree_util.tree_map(jnp.zeros_like, s), jnp.zeros_like(c))
+
+
+mean = Monoid(
+    name="mean",
+    combine=_mean_combine,
+    identity_fn=_mean_identity,
+    lift=lambda r: (r, jnp.ones((), jnp.int32)),
+    extract=lambda m: jax.tree_util.tree_map(
+        lambda s: s / jnp.maximum(m[1], 1).astype(jnp.result_type(s, jnp.float32)), m[0]
+    ),
+)
+
+count = Monoid(
+    name="count",
+    combine=jnp.add,
+    identity_fn=lambda *, example=None: jnp.zeros((), jnp.int32),
+    lift=lambda _: jnp.ones((), jnp.int32),
+)
+
+# ---------------------------------------------------------------------------
+# Welford / Chan parallel variance — streaming (count, mean, M2)
+# ---------------------------------------------------------------------------
+
+def _welford_combine(a, b):
+    na, ma, m2a = a
+    nb, mb, m2b = b
+    n = na + nb
+    nf = jnp.maximum(n, 1.0)
+    delta = mb - ma
+    mean_ = ma + delta * (nb / nf)
+    m2 = m2a + m2b + delta * delta * (na * nb / nf)
+    return (n, mean_, m2)
+
+
+welford = Monoid(
+    name="welford",
+    combine=_welford_combine,
+    identity_fn=lambda *, example=None: (
+        jnp.zeros(()) if example is None else jnp.zeros_like(example[0]),
+        jnp.zeros(()) if example is None else jnp.zeros_like(example[1]),
+        jnp.zeros(()) if example is None else jnp.zeros_like(example[2]),
+    ),
+    lift=lambda x: (jnp.ones_like(x), x, jnp.zeros_like(x)),
+    extract=lambda m: {"count": m[0], "mean": m[1], "var": m[2] / jnp.maximum(m[0], 1.0)},
+)
+
+# ---------------------------------------------------------------------------
+# logsumexp and the attention-state monoid (online softmax)
+# ---------------------------------------------------------------------------
+
+def _safe_coeff(m_old, m_new):
+    """exp(m_old - m_new), with the convention exp(-inf - -inf) = 0."""
+    return jnp.where(jnp.isneginf(m_old), 0.0, jnp.exp(m_old - m_new))
+
+
+def _lse_combine(a, b):
+    (ma, la), (mb, lb) = a, b
+    m = jnp.maximum(ma, mb)
+    return (m, la * _safe_coeff(ma, m) + lb * _safe_coeff(mb, m))
+
+
+logsumexp = Monoid(
+    name="logsumexp",
+    combine=_lse_combine,
+    identity_fn=lambda *, example=None: (
+        (jnp.full((), -jnp.inf), jnp.zeros(())) if example is None
+        else (jnp.full_like(example[0], -jnp.inf), jnp.zeros_like(example[1]))
+    ),
+    lift=lambda x: (x, jnp.ones_like(x)),
+    extract=lambda m: m[0] + jnp.log(m[1]),
+)
+
+
+def _attn_combine(a, b):
+    """Combine two partial softmax-attention states.
+
+    State = (m, l, o): running max of logits, running sum of exp(logit - m),
+    running sum of exp(logit - m) * V. Shapes: m, l: (...,); o: (..., d).
+    This is the flash-attention / flash-decoding merge — associative, so any
+    chunking/sharding of the KV axis is a legal re-bracketing (the paper's
+    principle applied to softmax).
+    """
+    (ma, la, oa), (mb, lb, ob) = a, b
+    m = jnp.maximum(ma, mb)
+    ca = _safe_coeff(ma, m)
+    cb = _safe_coeff(mb, m)
+    l = la * ca + lb * cb
+    o = oa * ca[..., None] + ob * cb[..., None]
+    return (m, l, o)
+
+
+def _attn_identity(*, example=None):
+    if example is None:
+        raise ValueError("attn_state identity requires an example (shape-polymorphic)")
+    m, l, o = example
+    return (jnp.full_like(m, -jnp.inf), jnp.zeros_like(l), jnp.zeros_like(o))
+
+
+attn_state = Monoid(
+    name="attn_state",
+    combine=_attn_combine,
+    identity_fn=_attn_identity,
+    extract=lambda s: s[2] / jnp.maximum(s[1], 1e-30)[..., None],
+)
+
+# ---------------------------------------------------------------------------
+# affine-map composition — linear recurrences (Mamba / mLSTM / prefix sums)
+# ---------------------------------------------------------------------------
+
+def _affine_combine(f, g):
+    """Compose x -> g(f(x)) for affine maps f=(a1,b1), g=(a2,b2).
+
+    (g∘f)(x) = a2*(a1*x + b1) + b2 = (a2*a1)*x + (a2*b1 + b2).
+    Elementwise `a` covers diagonal state matrices (Mamba's Ā).
+    NOT commutative — sequence order matters.
+    """
+    a1, b1 = f
+    a2, b2 = g
+    return (a2 * a1, a2 * b1 + b2)
+
+
+affine_scan = Monoid(
+    name="affine_scan",
+    combine=_affine_combine,
+    identity_fn=lambda *, example=None: (
+        (jnp.ones(()), jnp.zeros(())) if example is None
+        else (jnp.ones_like(example[0]), jnp.zeros_like(example[1]))
+    ),
+    commutative=False,
+    extract=lambda f: f[1],  # applied to initial state 0: h = b
+)
+
+# ---------------------------------------------------------------------------
+# top-k
+# ---------------------------------------------------------------------------
+
+def top_k(k: int) -> Monoid:
+    """Monoid of the k largest (value, id) pairs, values sorted descending."""
+
+    def combine(a, b):
+        va, ia = a
+        vb, ib = b
+        v = jnp.concatenate([va, vb], axis=-1)
+        i = jnp.concatenate([ia, ib], axis=-1)
+        vals, idx = jax.lax.top_k(v, k)
+        return (vals, jnp.take_along_axis(i, idx, axis=-1))
+
+    def identity_fn(*, example=None):
+        if example is None:
+            return (jnp.full((k,), -jnp.inf), jnp.full((k,), -1, jnp.int32))
+        v, i = example
+        return (jnp.full_like(v, -jnp.inf), jnp.full_like(i, -1))
+
+    def lift(vi):
+        v, i = vi
+        pad_v = jnp.full((k - 1,), -jnp.inf, jnp.result_type(v, jnp.float32))
+        pad_i = jnp.full((k - 1,), -1, jnp.int32)
+        return (jnp.concatenate([jnp.atleast_1d(v).astype(pad_v.dtype), pad_v]),
+                jnp.concatenate([jnp.atleast_1d(i).astype(jnp.int32), pad_i]))
+
+    return Monoid(name=f"top{k}", combine=combine, identity_fn=identity_fn, lift=lift)
+
+# ---------------------------------------------------------------------------
+# hashing utilities for the sketch monoids
+# ---------------------------------------------------------------------------
+
+_HASH_PRIMES = np.array([
+    0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1,
+    0xD3A2646C, 0xFD7046C5, 0xB55A4F09, 0x8DA6B343, 0xD8163841,
+], dtype=np.uint32)
+
+
+def _uhash(x: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """Multiply-xorshift universal hash of int token ids -> uint32."""
+    x = x.astype(jnp.uint32)
+    a = jnp.uint32(_HASH_PRIMES[seed % len(_HASH_PRIMES)])
+    b = jnp.uint32(_HASH_PRIMES[(seed + 3) % len(_HASH_PRIMES)])
+    h = (x ^ (x >> 16)) * a
+    h = (h ^ (h >> 13)) * b
+    return h ^ (h >> 16)
+
+# ---------------------------------------------------------------------------
+# Bloom filter (paper §3, [Bloom 1970])
+# ---------------------------------------------------------------------------
+
+def bloom_filter(num_bits: int, num_hashes: int = 4) -> Monoid:
+    """Bloom filter over int ids. Monoid under bitwise OR; identity = empty."""
+    assert num_bits % 8 == 0
+
+    def lift(item):
+        idx = jnp.stack([_uhash(item, s) % num_bits for s in range(num_hashes)])
+        bits = jnp.zeros((num_bits,), jnp.uint8).at[idx].set(1)
+        return bits
+
+    m = Monoid(
+        name=f"bloom({num_bits},{num_hashes})",
+        combine=_tree_binary(jnp.bitwise_or),
+        identity_fn=lambda *, example=None: jnp.zeros((num_bits,), jnp.uint8),
+        lift=lift,
+    )
+    return m
+
+
+def bloom_contains(filt: jnp.ndarray, item: jnp.ndarray, num_hashes: int = 4) -> jnp.ndarray:
+    num_bits = filt.shape[-1]
+    idx = jnp.stack([_uhash(item, s) % num_bits for s in range(num_hashes)])
+    return jnp.all(filt[idx] > 0)
+
+# ---------------------------------------------------------------------------
+# count-min sketch (paper §3, [Cormode & Muthukrishnan 2005])
+# ---------------------------------------------------------------------------
+
+def count_min(depth: int, width: int) -> Monoid:
+    """Count-min sketch: (depth, width) counters; monoid under elementwise +."""
+
+    def lift(item):
+        # one item -> a (depth, width) one-hot increment
+        sk = jnp.zeros((depth, width), jnp.int32)
+        for d in range(depth):
+            sk = sk.at[d, _uhash(item, d) % width].add(1)
+        return sk
+
+    return Monoid(
+        name=f"cms({depth},{width})",
+        combine=_tree_binary(jnp.add),
+        identity_fn=lambda *, example=None: jnp.zeros((depth, width), jnp.int32),
+        lift=lift,
+    )
+
+
+def cms_query(sketch: jnp.ndarray, item: jnp.ndarray) -> jnp.ndarray:
+    depth, width = sketch.shape
+    ests = jnp.stack([sketch[d, _uhash(item, d) % width] for d in range(depth)])
+    return jnp.min(ests)
+
+
+def cms_update_batch(sketch: jnp.ndarray, items: jnp.ndarray,
+                     weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Vectorized in-mapper combine of a whole batch into the sketch."""
+    depth, width = sketch.shape
+    if weights is None:
+        weights = jnp.ones_like(items, jnp.int32)
+    for d in range(depth):
+        sketch = sketch.at[d, _uhash(items, d) % width].add(weights)
+    return sketch
+
+# ---------------------------------------------------------------------------
+# HyperLogLog (paper §3, [Flajolet et al. 2007])
+# ---------------------------------------------------------------------------
+
+def _rho(v: jnp.ndarray, bitwidth: int) -> jnp.ndarray:
+    """Position (1-based) of the leftmost 1 bit within `bitwidth` bits; 0 -> bitwidth+1."""
+    shifts = jnp.arange(bitwidth - 1, -1, -1, dtype=jnp.uint32)
+    bits = (v[..., None] >> shifts) & jnp.uint32(1)
+    first_one = jnp.argmax(bits, axis=-1)
+    any_one = jnp.any(bits > 0, axis=-1)
+    return jnp.where(any_one, first_one + 1, bitwidth + 1).astype(jnp.uint8)
+
+
+def hyperloglog(precision: int = 8) -> Monoid:
+    """HLL with 2^precision registers; monoid under elementwise max."""
+    p = precision
+    m_regs = 1 << p
+    suffix_bits = 32 - p
+
+    def lift(item):
+        h = _uhash(item, 7)
+        idx = (h >> suffix_bits).astype(jnp.int32)
+        suffix = h & jnp.uint32((1 << suffix_bits) - 1)
+        r = _rho(suffix, suffix_bits)
+        regs = jnp.zeros((m_regs,), jnp.uint8)
+        return regs.at[idx].max(r)
+
+    def extract(regs):
+        if p >= 7:
+            alpha = 0.7213 / (1 + 1.079 / m_regs)
+        else:
+            alpha = {4: 0.673, 5: 0.697, 6: 0.709}.get(p, 0.7213 / (1 + 1.079 / m_regs))
+        z = jnp.sum(jnp.exp2(-regs.astype(jnp.float32)))
+        est = alpha * m_regs * m_regs / z
+        # small-range (linear counting) correction
+        zeros = jnp.sum(regs == 0)
+        lc = m_regs * jnp.log(m_regs / jnp.maximum(zeros, 1).astype(jnp.float32))
+        return jnp.where((est <= 2.5 * m_regs) & (zeros > 0), lc, est)
+
+    return Monoid(
+        name=f"hll(p={p})",
+        combine=_tree_binary(jnp.maximum),
+        identity_fn=lambda *, example=None: jnp.zeros((m_regs,), jnp.uint8),
+        lift=lift,
+        extract=extract,
+    )
+
+
+def hll_update_batch(regs: jnp.ndarray, items: jnp.ndarray) -> jnp.ndarray:
+    p = int(math.log2(regs.shape[-1]))
+    suffix_bits = 32 - p
+    h = _uhash(items, 7)
+    idx = (h >> suffix_bits).astype(jnp.int32)
+    suffix = h & jnp.uint32((1 << suffix_bits) - 1)
+    r = _rho(suffix, suffix_bits)
+    return regs.at[idx].max(r)
+
+# ---------------------------------------------------------------------------
+# stripes — the paper's Algorithm 5 (associative arrays under elementwise sum)
+# ---------------------------------------------------------------------------
+
+# A "stripe" H_w is the dense count vector over the (bucketed) vocabulary for
+# focus word w. Associative arrays under element-wise sum == `sum_` on the
+# dense representation; the monoid *is* sum, the representation is the point.
+stripes = sum_
+
+
+def stripe_of_window(window: jnp.ndarray, vocab: int, center: int) -> jnp.ndarray:
+    """Lift one context window into the stripe for its center word (Alg 5 map)."""
+    neigh = jnp.delete(window, center, assume_unique_indices=True)
+    return jnp.zeros((vocab,), jnp.int32).at[neigh].add(1)
+
+
+def cooccurrence_stripes(tokens: jnp.ndarray, vocab: int, window: int) -> jnp.ndarray:
+    """Full (vocab, vocab) co-occurrence via stripes, in-mapper combined.
+
+    tokens: (n,) int ids. Counts pairs (w, u) with |pos(w)-pos(u)| <= window,
+    u != w position. Reference implementation (the Pallas kernel in
+    kernels/stripes.py accelerates this).
+    """
+    n = tokens.shape[0]
+    mat = jnp.zeros((vocab, vocab), jnp.int32)
+    for offset in range(1, window + 1):   # window is static and small
+        left = tokens[: n - offset]
+        right = tokens[offset:]
+        mat = mat.at[left, right].add(1)
+        mat = mat.at[right, left].add(1)
+    return mat
+
+# ---------------------------------------------------------------------------
+# combinators
+# ---------------------------------------------------------------------------
+
+def product(**named: Monoid) -> Monoid:
+    """Product monoid over a dict of monoids — one collective for many stats."""
+    names = sorted(named)
+
+    def combine(a, b):
+        return {k: named[k].combine(a[k], b[k]) for k in names}
+
+    def identity_fn(*, example=None):
+        if example is None:
+            return {k: named[k].identity() for k in names}
+        return {k: named[k].identity_like(example[k]) for k in names}
+
+    def lift(x):
+        return {k: named[k].lift(x[k]) for k in names}
+
+    def extract(m):
+        return {k: named[k].extract(m[k]) for k in names}
+
+    return Monoid(
+        name="product(" + ",".join(f"{k}={named[k].name}" for k in names) + ")",
+        combine=combine,
+        identity_fn=identity_fn,
+        lift=lift,
+        extract=extract,
+        commutative=all(named[k].commutative for k in names),
+    )
+
+
+REGISTRY: Dict[str, Monoid] = {
+    "sum": sum_,
+    "prod": prod,
+    "max": max_,
+    "min": min_,
+    "mean": mean,
+    "count": count,
+    "welford": welford,
+    "logsumexp": logsumexp,
+    "attn_state": attn_state,
+    "affine_scan": affine_scan,
+    "bitwise_or": bitwise_or,
+}

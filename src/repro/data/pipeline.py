@@ -1,0 +1,126 @@
+"""Deterministic, host-sharded, resumable data pipeline.
+
+Design (DESIGN.md §3):
+
+* **Stateless generation** — batch ``i`` is a pure function of
+  ``(seed, step=i, host_id)``; resuming from a checkpoint at step k needs no
+  iterator state, only k. This is the data-side half of the monoid-restart
+  guarantee (the aggregate of steps [0, k) combines with [k, n)).
+* **Host sharding** — each host draws only its slice of the global batch
+  (``host_id / num_hosts``), matching the jit in_shardings batch layout.
+* **Synthetic corpus** — Zipf-distributed tokens with document structure
+  (EOS-terminated docs, geometric lengths), packed to fixed seq_len. A stub
+  for a real tokenized corpus; the interface (``__call__(step) -> batch``) is
+  what the trainer depends on.
+* **Prefetch** — a depth-bounded background thread (double buffering).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    mean_doc_len: int = 256
+    eos_id: int = 0
+    pad_id: int = 0
+
+
+class SyntheticCorpus:
+    """batch(step) -> {tokens, labels} for this host's shard, deterministically."""
+
+    def __init__(self, cfg: DataConfig, *, host_id: int = 0, num_hosts: int = 1,
+                 context_shape: Optional[tuple] = None,
+                 context_dtype=jnp.bfloat16):
+        assert cfg.global_batch % num_hosts == 0
+        self.cfg = cfg
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self.local_batch = cfg.global_batch // num_hosts
+        self.context_shape = context_shape
+        self.context_dtype = context_dtype
+        # Zipf over a fixed vocab via inverse-CDF on precomputed weights
+        ranks = np.arange(1, cfg.vocab_size, dtype=np.float64)  # id 0 = EOS
+        w = ranks ** (-cfg.zipf_a)
+        self._cdf = np.cumsum(w) / w.sum()
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.cfg.seed, step, self.host_id]))
+
+    def __call__(self, step: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        rng = self._rng(step)
+        B, S = self.local_batch, cfg.seq_len
+        u = rng.random((B, S))
+        toks = (np.searchsorted(self._cdf, u) + 1).astype(np.int32)
+        # document structure: EOS with prob 1/mean_doc_len (geometric docs)
+        eos_mask = rng.random((B, S)) < (1.0 / cfg.mean_doc_len)
+        toks = np.where(eos_mask, cfg.eos_id, toks)
+        labels = np.concatenate([toks[:, 1:], np.full((B, 1), -1, np.int32)],
+                                axis=1)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        if self.context_shape is not None:
+            ctx = rng.standard_normal((B,) + tuple(self.context_shape),
+                                      dtype=np.float32)
+            batch["context"] = jnp.asarray(ctx, self.context_dtype)
+        return batch
+
+
+class Prefetcher:
+    """Depth-bounded background prefetch over ``source(step)``.
+
+    Exactly-once per step; ``close()`` joins the thread. Resumable: pass the
+    restart step to the constructor.
+    """
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2,
+                 num_steps: Optional[int] = None):
+        self.source = source
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._steps = range(start_step, num_steps if num_steps is not None
+                            else (1 << 62))
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        for step in self._steps:
+            if self._stop.is_set():
+                return
+            batch = self.source(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+        self._q.put(None)
+
+    def __iter__(self) -> Iterator:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            yield item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

@@ -1,0 +1,66 @@
+"""Streaming corpus statistics as one product monoid (paper §3).
+
+One accumulator tracks, over the token stream:
+  * ``cms``   — count-min sketch of token frequencies (approximate counts),
+  * ``hll``   — HyperLogLog of distinct token ids,
+  * ``bloom`` — Bloom filter of seen ids (membership),
+  * ``count`` — exact token count,
+
+combined per batch with in-mapper combining (Algorithm 4: one fold per batch,
+state carried across batches), and across hosts with ONE collective over the
+product monoid. This is the Summingbird observation (paper §4): the same
+monoid serves the streaming pipeline and any batch job.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..core import monoids
+from ..core.monoid import Monoid
+
+
+def make_stream_stats(*, cms_depth: int = 4, cms_width: int = 2048,
+                      hll_precision: int = 10,
+                      bloom_bits: int = 1 << 14) -> Monoid:
+    return monoids.product(
+        cms=monoids.count_min(cms_depth, cms_width),
+        hll=monoids.hyperloglog(hll_precision),
+        bloom=monoids.bloom_filter(bloom_bits),
+        count=monoids.count,
+    )
+
+
+def init_stats(m: Monoid) -> Dict[str, Any]:
+    return m.identity()
+
+
+@jax.jit
+def _fold_tokens(state, tokens):
+    """In-mapper combine of one token batch into the stats state."""
+    flat = tokens.reshape(-1)
+    cms = monoids.cms_update_batch(state["cms"], flat)
+    hll = monoids.hll_update_batch(state["hll"], flat)
+    # bloom: batch OR of per-hash one-hots
+    nb = state["bloom"].shape[-1]
+    bloom = state["bloom"]
+    for s in range(4):
+        idx = monoids._uhash(flat, s) % nb
+        bloom = bloom.at[idx].set(1)
+    count = state["count"] + flat.shape[0]
+    return {"cms": cms, "hll": hll, "bloom": bloom, "count": count}
+
+
+def update_stats(state: Dict[str, Any], tokens: jnp.ndarray) -> Dict[str, Any]:
+    return _fold_tokens(state, tokens)
+
+
+def summarize(m: Monoid, state: Dict[str, Any]) -> Dict[str, Any]:
+    """extract(): approximate distinct count, total, heavy-hitter counts."""
+    out = m.extract(state)
+    return {"tokens": int(out["count"]),
+            "approx_distinct": float(out["hll"]),
+            "cms": state["cms"], "bloom": state["bloom"]}

@@ -1,0 +1,8 @@
+"""repro.kernels — Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel: <name>.py (pl.pallas_call + explicit BlockSpec VMEM tiling),
+ops.py (jit'd wrappers), ref.py (pure-jnp oracles). Validated on CPU with
+interpret=True + hypothesis shape/dtype sweeps (tests/test_kernels.py).
+"""
+from .ops import cms_update, flash_attn, mean_by_key, segment_fold, stripes
+from . import ref

@@ -1,0 +1,63 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU — pl.pallas_call + BlockSpec VMEM tiling — and are
+validated in interpret mode against the ref.py oracles).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .segment_fold import segment_fold_pallas
+from .cms import cms_update_pallas
+from .stripes import stripes_pallas
+from .flash_attention import flash_attention
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("num_segments", "with_count", "block_n"))
+def segment_fold(values: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
+                 *, with_count: bool = False, block_n: int = 512):
+    """MXU-tiled key-grouped sum (and count): the paper's combiner."""
+    return segment_fold_pallas(values, seg_ids, num_segments,
+                               with_count=with_count, block_n=block_n,
+                               interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("num_segments", "block_n"))
+def mean_by_key(values: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
+                *, block_n: int = 512) -> jnp.ndarray:
+    """The paper's running example, kernel edition: extract(sum/count)."""
+    sums, counts = segment_fold_pallas(values, seg_ids, num_segments,
+                                       with_count=True, block_n=block_n,
+                                       interpret=_default_interpret())
+    return sums / jnp.maximum(counts, 1.0)[:, None]
+
+
+@partial(jax.jit, static_argnames=("depth", "width", "block_n"))
+def cms_update(tokens: jnp.ndarray, depth: int = 4, width: int = 2048,
+               *, block_n: int = 1024) -> jnp.ndarray:
+    return cms_update_pallas(tokens, depth, width, block_n=block_n,
+                             interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("vocab", "window", "block_n"))
+def stripes(tokens: jnp.ndarray, vocab: int, window: int,
+            *, block_n: int = 512) -> jnp.ndarray:
+    return stripes_pallas(tokens, vocab, window, block_n=block_n,
+                          interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+               causal: bool = True, block_q: int = 128,
+               block_k: int = 128) -> jnp.ndarray:
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=_default_interpret())

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core import monoids
+
+
+def segment_fold_ref(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                     num_segments: int, *, with_count: bool = False):
+    """Sum (and optional count) of values by segment id. values: (N, D)."""
+    sums = jax.ops.segment_sum(values.astype(jnp.float32), seg_ids,
+                               num_segments=num_segments)
+    if not with_count:
+        return sums
+    counts = jax.ops.segment_sum(jnp.ones((values.shape[0],), jnp.float32),
+                                 seg_ids, num_segments=num_segments)
+    return sums, counts
+
+
+def cms_update_ref(tokens: jnp.ndarray, depth: int, width: int) -> jnp.ndarray:
+    """Count-min sketch of a token batch (int32 counts)."""
+    sketch = jnp.zeros((depth, width), jnp.int32)
+    return monoids.cms_update_batch(sketch, tokens)
+
+
+def stripes_ref(tokens: jnp.ndarray, vocab: int, window: int) -> jnp.ndarray:
+    """Symmetric co-occurrence counts within +-window (Algorithm 5)."""
+    return monoids.cooccurrence_stripes(tokens, vocab, window)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True) -> jnp.ndarray:
+    """Plain softmax attention. q: (B,H,Sq,d); k,v: (B,KV,Sk,d); GQA by
+    head-group broadcast."""
+    B, H, Sq, d = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, d)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    if causal:
+        Sk = k.shape[2]
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        scores = jnp.where(mask, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, d).astype(q.dtype)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: key-grouped monoid fold (the paper's combiner).
+
+Hadoop's combiner sorts intermediate pairs and streams them; the TPU
+adaptation (DESIGN.md §5) instead:
+
+* tiles the record axis N into VMEM-sized blocks (grid dim 0),
+* holds the per-key accumulator table (S, D) RESIDENT IN VMEM across grid
+  steps — in-mapper combining *inside the kernel* (the output block's
+  index_map is constant, so Pallas keeps one live copy),
+* turns the scatter into a one-hot (S, BN) x (BN, D) matmul so the combine
+  runs on the MXU systolic array (a serialized scatter would be VPU-bound —
+  napkin math: BN=512, S=512, D=512 => 1.3e8 MACs/block vs 2.6e5 serial VPU
+  adds; the MXU path is ~500x denser).
+
+The additive monoids (sum / count / mean's (sum,count) pair) are exactly the
+paper's running example; `with_count=True` appends a ones column so mean's
+two components ride one matmul.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_fold_kernel(seg_ref, val_ref, out_ref, *, num_segments: int,
+                         block_n: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    seg = seg_ref[...]                                   # (BN,)
+    vals = val_ref[...].astype(jnp.float32)              # (BN, D)
+    # one-hot scatter as an MXU matmul: (S, BN) @ (BN, D)
+    onehot = (seg[None, :] == jax.lax.broadcasted_iota(
+        jnp.int32, (num_segments, block_n), 0)).astype(jnp.float32)
+    out_ref[...] += jax.lax.dot(onehot, vals,
+                                preferred_element_type=jnp.float32)
+
+
+def segment_fold_pallas(values: jnp.ndarray, seg_ids: jnp.ndarray,
+                        num_segments: int, *, block_n: int = 512,
+                        with_count: bool = False, interpret: bool = True):
+    """values: (N, D); seg_ids: (N,) int32 in [0, num_segments).
+
+    Returns (S, D) sums — or ((S, D) sums, (S,) counts) with with_count.
+    N is padded to a block multiple with an out-of-range segment id (folded
+    into no real segment — the monoid identity contributes nothing).
+    """
+    N, D = values.shape
+    if with_count:
+        values = jnp.concatenate(
+            [values.astype(jnp.float32), jnp.ones((N, 1), jnp.float32)], axis=1)
+        D += 1
+    pad = (-N) % block_n
+    if pad:
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad, D), values.dtype)], axis=0)
+        seg_ids = jnp.concatenate(
+            [seg_ids, jnp.zeros((pad,), seg_ids.dtype)], axis=0)
+        # padded rows are zeros: they add identity to segment 0
+    grid = ((N + pad) // block_n,)
+    out = pl.pallas_call(
+        functools.partial(_segment_fold_kernel, num_segments=num_segments,
+                          block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, D), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, D), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, D), jnp.float32),
+        interpret=interpret,
+    )(seg_ids.astype(jnp.int32), values)
+    if with_count:
+        return out[:, :-1], out[:, -1]
+    return out

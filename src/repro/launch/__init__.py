@@ -1,0 +1,9 @@
+"""repro.launch — meshes, jit step builders, dry-run + training entry points.
+
+NOTE: ``dryrun`` is intentionally NOT imported here — it sets
+``--xla_force_host_platform_device_count=512`` at import time and must only
+be imported as the main entry point (``python -m repro.launch.dryrun``).
+"""
+from .mesh import make_host_mesh, make_mesh, make_production_mesh
+from .steps import (BuiltStep, build_step, cache_shardings, make_decode_step,
+                    make_prefill_step, make_train_step, trim_rules)

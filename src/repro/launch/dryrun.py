@@ -1,0 +1,206 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, prove it fits (memory_analysis) and extract the roofline
+terms (cost_analysis + trip-count-corrected HLO analysis).
+
+The two lines above MUST stay first: jax locks the device count at first
+backend init, and the 512 placeholder host devices exist only for this
+entry point (smoke tests and benches see 1 device).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--multi-pod] --out results.json
+"""
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPES, get_config, valid_cells   # noqa: E402
+from ..models import RunCtx                                       # noqa: E402
+from .mesh import make_production_mesh                            # noqa: E402
+from .steps import build_step                                     # noqa: E402
+from . import hlo_analysis as ha                                  # noqa: E402
+
+
+def _mem_analysis_dict(compiled) -> dict:
+    out = {}
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_hbm_bytes"] = int(
+        out.get("argument_size_in_bytes", 0) + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0) - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def model_flops_for_cell(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS for the whole step (all chips)."""
+    n_active = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             moe_impl: str = "replicated", ce_chunk: int = 0,
+             attn_chunk: int = 0, microbatches: int = 1,
+             remat: str = "full", keep_hlo: bool = False,
+             f32_chains: bool = False, seq_parallel: bool = False) -> dict:
+    from ..models import common as model_common
+    from ..dist import sharding as shd
+    model_common.set_f32_chains(f32_chains)
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name not in valid_cells(cfg):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "long_500k requires sub-quadratic attention"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    decode_impl = "flash" if (shape.kind == "decode" and shape.seq_len > 100_000) \
+        else "dense"
+    ctx = RunCtx(mesh=mesh, moe_impl=moe_impl,
+                 attn_chunk=attn_chunk or None, ce_chunk=ce_chunk,
+                 remat=remat, decode_impl=decode_impl)
+    kw = {"ctx": ctx}
+    if shape.kind == "train" and microbatches > 1:
+        kw["num_microbatches"] = microbatches
+    if seq_parallel:
+        base = shd.TRAIN_RULES if shape.kind == "train" else shd.SERVE_RULES
+        kw["rules"] = dict(base, seq="model")
+
+    t0 = time.time()
+    built = build_step(cfg, mesh, shape, **kw)
+    lowered = built.fn.lower(*built.abstract_args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = _mem_analysis_dict(compiled)
+    try:
+        raw_cost = dict(compiled.cost_analysis())
+    except Exception as e:
+        raw_cost = {"error": str(e)}
+    print("memory_analysis:", json.dumps(mem), flush=True)
+    print("cost_analysis[flops]:", raw_cost.get("flops"), flush=True)
+
+    text = compiled.as_text()
+    cost = ha.analyze_hlo(text, raw_cost={k: v for k, v in raw_cost.items()
+                                          if isinstance(v, (int, float))},
+                          seq_len=shape.seq_len if shape.kind != "decode" else None)
+    chips = mesh.devices.size
+    mf = model_flops_for_cell(cfg, shape)
+    rf = ha.roofline_terms(cost, model_flops_per_chip=mf / chips)
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": int(chips),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "per_chip": {
+            "flops": cost.flops, "mem_bytes": cost.mem_bytes,
+            "coll_bytes": cost.coll_bytes,
+            "coll_by_kind": cost.coll_by_kind,
+        },
+        "roofline": {
+            "compute_s": rf.compute_s, "memory_s": rf.memory_s,
+            "collective_s": rf.collective_s, "dominant": rf.dominant,
+            "bound_s": rf.bound_s,
+            "model_flops_total": mf,
+            "useful_flops_ratio": rf.useful_flops_ratio(),
+            "roofline_fraction": rf.roofline_fraction(),
+            "score_bytes": cost.score_bytes,
+            "flash_sub_memory_s": cost.flash_substituted_mem() / ha.HBM_BW,
+        },
+        "loops": cost.loops[:20],
+        "raw_cost_analysis_flops": raw_cost.get("flops"),
+        "options": {"moe_impl": moe_impl, "ce_chunk": ce_chunk,
+                    "attn_chunk": attn_chunk, "microbatches": microbatches,
+                    "remat": remat, "decode_impl": decode_impl,
+                    "multi_pod": multi_pod, "f32_chains": f32_chains,
+                    "seq_parallel": seq_parallel},
+    }
+    if keep_hlo:
+        result["hlo_path"] = f"/tmp/{arch}_{shape_name}_{'mp' if multi_pod else 'sp'}.hlo"
+        with open(result["hlo_path"], "w") as f:
+            f.write(text)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape cell or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-impl", default="replicated",
+                    choices=["replicated", "a2a"])
+    ap.add_argument("--ce-chunk", type=int, default=0)
+    ap.add_argument("--attn-chunk", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="full", choices=["full", "none"])
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--f32-chains", action="store_true",
+                    help="baseline precision policy (f32 norm/rotary/proj chains)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="shard the residual stream's seq dim over 'model'")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    results = []
+    ok = True
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = valid_cells(cfg) if args.shape == "all" else [args.shape]
+        for shape_name in shapes:
+            tag = f"{arch} x {shape_name} ({'multi' if args.multi_pod else 'single'}-pod)"
+            print(f"=== dry-run {tag}", flush=True)
+            try:
+                r = run_cell(arch, shape_name, multi_pod=args.multi_pod,
+                             moe_impl=args.moe_impl, ce_chunk=args.ce_chunk,
+                             attn_chunk=args.attn_chunk,
+                             microbatches=args.microbatches, remat=args.remat,
+                             keep_hlo=args.keep_hlo,
+                             f32_chains=args.f32_chains,
+                             seq_parallel=args.seq_parallel)
+                results.append(r)
+                if not r.get("skipped"):
+                    rf = r["roofline"]
+                    print(f"    compile={r['compile_s']}s dominant={rf['dominant']} "
+                          f"compute={rf['compute_s']:.4f}s memory={rf['memory_s']:.4f}s "
+                          f"collective={rf['collective_s']:.4f}s "
+                          f"useful={rf['useful_flops_ratio']:.2f}", flush=True)
+            except Exception as e:
+                ok = False
+                results.append({"arch": arch, "shape": shape_name,
+                                "error": repr(e)})
+                print(f"    FAILED: {e!r}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

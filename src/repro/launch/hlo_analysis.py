@@ -1,0 +1,522 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` visits every while body ONCE, so a
+scan-over-layers program under-reports FLOPs/bytes by ~num_layers.  This
+module re-derives the three roofline terms directly from ``compiled.as_text()``:
+
+1. parse the module into computations, with a per-computation symbol table
+   (HLO text references operands by %name without inline types),
+2. build the call graph (while bodies/conditions, fusions, calls) and
+   extract each while loop's static trip count from the constant bound in
+   its condition computation,
+3. cost each computation —
+     * flops: dot ops (2 * result_elems * contracted_elems) + convolutions,
+     * memory bytes: a single-pass fusion model (see below),
+     * collective bytes: operand bytes of all-gather / all-reduce /
+       reduce-scatter / all-to-all / collective-permute,
+4. propagate through the call graph with trip-count multipliers.
+
+Memory model (the "fused single-pass" model):
+  * a fusion op reads each operand once and writes its result once, EXCEPT
+      - an operand consumed only via dynamic-slice contributes the SLICE
+        bytes (gather/DS reads rows, not the table),
+      - the accumulator pattern (operand aliased to a dynamic-update-slice
+        root, possibly through converts) contributes the UPDATE bytes on
+        both the read and the write side (in-place on TPU);
+  * top-level non-fused ops: operands + result, with the same dus/slice
+    rules; `convert`/`bitcast`/`tuple`/... are free (always fused on TPU);
+  * fusion-internal intermediates are free (they live in registers/VMEM).
+
+All sizes are PER-PARTITION (the text is the post-partitioning module), so
+terms divide by per-chip peak rates directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"bitcast", "tuple", "get-tuple-element", "parameter", "constant",
+             "after-all", "iota", "while", "conditional", "custom-call",
+             "partition-id", "replica-id", "convert", "copy-start", "copy-done",
+             "reshape"}
+_SLICE_OPS = {"dynamic-slice", "gather", "slice"}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->\s*(.+)\s*\{\s*$")
+
+
+def _shape_list_bytes(shapes: List[Tuple[str, str]]) -> int:
+    return sum(_shape_bytes(d, s) for d, s in shapes)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class OpLine:
+    name: str
+    op: str
+    rhs: str
+    res_shapes: List[Tuple[str, str]]
+    opnds: List[str]
+
+
+@dataclasses.dataclass
+class Comp:
+    name: str
+    params: List[str] = dataclasses.field(default_factory=list)
+    symbols: Dict[str, List[Tuple[str, str]]] = dataclasses.field(default_factory=dict)
+    lines: List[OpLine] = dataclasses.field(default_factory=list)
+    constants: List[int] = dataclasses.field(default_factory=list)
+    root: Optional[str] = None
+    calls: List[str] = dataclasses.field(default_factory=list)
+    while_children: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    mem_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    loops: List[Tuple[str, int]]
+    raw_cost_analysis: Dict[str, float]
+    score_bytes: float = 0.0   # traffic of (…, k*S, S)-shaped f32 score tensors
+
+    def flash_substituted_mem(self) -> float:
+        """Memory bytes if attention scores stay in VMEM (the validated
+        Pallas flash kernel, kernels/flash_attention.py): all S^2-shaped
+        score traffic is removed; Q/K/V/O traffic is already counted by the
+        surrounding ops. Reported alongside the raw term — the kernel cannot
+        appear in a CPU-compiled dry-run."""
+        return self.mem_bytes - self.score_bytes
+
+
+def _strip_meta(line: str) -> str:
+    for key in (", metadata={", ", backend_config=", ", sharding={"):
+        i = line.find(key)
+        if i >= 0:
+            line = line[:i]
+    return line
+
+
+def _operand_names(rhs: str) -> List[str]:
+    paren = rhs.find("(")
+    if paren < 0:
+        return []
+    depth = 0
+    end = paren
+    for i, ch in enumerate(rhs[paren:], start=paren):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = rhs[paren + 1:end]
+    return re.findall(r"%([\w\.\-]+)", inner)
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Comp], Optional[str]]:
+    comps: Dict[str, Comp] = {}
+    entry: Optional[str] = None
+    cur: Optional[Comp] = None
+    for raw in text.splitlines():
+        s = raw.strip()
+        h = _HEADER_RE.match(s)
+        if h and ("=" not in s.split("(")[0]):
+            cur = Comp(name=h.group(2))
+            comps[cur.name] = cur
+            if h.group(1):
+                entry = cur.name
+            for pm in re.finditer(r"([\w\.\-]+)\s*:\s*([^,()]*(?:\([^)]*\))?[^,]*)",
+                                  h.group(3)):
+                cur.params.append(pm.group(1))
+                cur.symbols[pm.group(1)] = _SHAPE_RE.findall(pm.group(2))
+            continue
+        if cur is None or not s or s == "}":
+            if s == "}":
+                cur = None
+            continue
+        d = _DEF_RE.match(_strip_meta(s))
+        if not d:
+            continue
+        name, rhs = d.group(1), d.group(2)
+        for m in re.finditer(r"constant\((-?\d+)\)", rhs):
+            cur.constants.append(int(m.group(1)))
+        opm = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        op = opm.group(1) if opm else ""
+        paren = rhs.find("(")
+        res_shapes = _SHAPE_RE.findall(rhs[:paren] if paren >= 0 else rhs)
+        cur.symbols[name] = res_shapes
+        line = OpLine(name=name, op=op, rhs=rhs, res_shapes=res_shapes,
+                      opnds=_operand_names(rhs))
+        cur.lines.append(line)
+        if s.lstrip().startswith("ROOT") or d.group(0).lstrip().startswith("ROOT"):
+            cur.root = name
+        if raw.lstrip().startswith("ROOT"):
+            cur.root = name
+        if op == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", rhs)
+            cond = re.search(r"condition=%?([\w\.\-]+)", rhs)
+            if body and cond:
+                cur.while_children.append((body.group(1), cond.group(1)))
+        else:
+            for key in ("calls=", "to_apply="):
+                mm = re.search(key + r"%?([\w\.\-]+)", rhs)
+                if mm:
+                    cur.calls.append(mm.group(1))
+            if op == "conditional":
+                for mm in re.finditer(
+                        r"(?:true_computation=|false_computation=|"
+                        r"branch_computations=\{)([^,}]+(?:,[^,}]+)*)", rhs):
+                    for nm in mm.group(1).split(","):
+                        cur.calls.append(nm.strip().lstrip("%"))
+    return comps, entry
+
+
+# ---------------------------------------------------------------------------
+# fusion-body single-pass memory model
+# ---------------------------------------------------------------------------
+
+def _fusion_param_classes(comp: Comp) -> Tuple[Dict[str, str], int]:
+    """Classify each fusion param: 'slice' (only dynamic-sliced/gathered),
+    'alias' (accumulator: reaches a dus at operand 0, root-aliased),
+    'full'. Returns (classes, root_write_bytes)."""
+    # map: value name -> originating param (through converts/bitcasts)
+    origin: Dict[str, str] = {p: p for p in comp.params}
+    uses: Dict[str, List[Tuple[str, int]]] = {}
+    for ln in comp.lines:
+        if ln.op in ("convert", "bitcast", "copy", "reshape") and ln.opnds:
+            src = origin.get(ln.opnds[0])
+            if src is not None:
+                origin[ln.name] = src
+        for i, o in enumerate(ln.opnds):
+            uses.setdefault(o, []).append((ln.op, i))
+            if o in origin and origin[o] != o:
+                uses.setdefault(origin[o], []).append((ln.op, i))
+
+    classes: Dict[str, str] = {}
+    dus_update_bytes = 0
+    root_dus = False
+    # find dus lines; check root aliasing chain
+    root_origin = None
+    if comp.root is not None:
+        # walk back from root through converts to a dus
+        back = comp.root
+        seen = set()
+        while back not in seen:
+            seen.add(back)
+            ln = next((l for l in comp.lines if l.name == back), None)
+            if ln is None:
+                break
+            if ln.op == "dynamic-update-slice":
+                root_dus = True
+                if len(ln.opnds) > 1:
+                    upd = comp.symbols.get(ln.opnds[1], [])
+                    dus_update_bytes = _shape_list_bytes(upd)
+                root_origin = origin.get(ln.opnds[0])
+                break
+            if ln.op in ("convert", "bitcast", "copy", "reshape") and ln.opnds:
+                back = ln.opnds[0]
+                continue
+            break
+
+    for p in comp.params:
+        u = uses.get(p, [])
+        if root_dus and root_origin == p:
+            classes[p] = "alias"
+        elif u and all(op in _SLICE_OPS and idx == 0 for op, idx in u):
+            classes[p] = "slice"
+        else:
+            classes[p] = "full"
+
+    if comp.root is not None and root_dus:
+        root_bytes = 2 * dus_update_bytes     # write update + read-modify
+    else:
+        root_bytes = _shape_list_bytes(comp.symbols.get(comp.root, [])) \
+            if comp.root else 0
+    return classes, root_bytes
+
+
+def _slice_read_bytes(comp: Comp, param: str) -> int:
+    """Bytes actually read from a 'slice'-class param (sum of slice results)."""
+    total = 0
+    for ln in comp.lines:
+        if ln.op in _SLICE_OPS and ln.opnds and ln.opnds[0] == param:
+            total += _shape_list_bytes(ln.res_shapes)
+    return total
+
+
+def _fusion_mem(comps: Dict[str, Comp], body_name: str,
+                call_opnd_shapes: List[List[Tuple[str, str]]],
+                memo: Dict[str, Tuple[Dict[str, str], int]]) -> int:
+    body = comps.get(body_name)
+    if body is None:
+        return 0
+    if body_name not in memo:
+        memo[body_name] = _fusion_param_classes(body)
+    classes, root_bytes = memo[body_name]
+    total = root_bytes
+    for i, p in enumerate(body.params):
+        cls = classes.get(p, "full")
+        if cls == "alias":
+            continue                      # in-place accumulator: counted at root
+        if cls == "slice":
+            total += _slice_read_bytes(body, p)
+        else:
+            shapes = body.symbols.get(p, [])
+            total += _shape_list_bytes(shapes)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# per-computation costing + aggregation
+# ---------------------------------------------------------------------------
+
+def _trip_count(comps: Dict[str, Comp], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None or not cond.constants:
+        return 1
+    pos = [c for c in cond.constants if c > 0]
+    return max(pos) if pos else 1
+
+
+def _dot_flops(comp: Comp, ln: OpLine) -> float:
+    contract = 1
+    lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln.rhs)
+    lhs_shape = comp.symbols.get(ln.opnds[0], []) if ln.opnds else []
+    if lc and lhs_shape:
+        lhs_dims = lhs_shape[0][1].split(",") if lhs_shape[0][1] else []
+        for idx in lc.group(1).split(","):
+            if idx and lhs_dims:
+                contract *= int(lhs_dims[int(idx)])
+    res_elems = sum(_shape_elems(s) for _, s in ln.res_shapes)
+    return 2.0 * res_elems * contract
+
+
+def _score_bytes(shapes: List[Tuple[str, str]], seq: Optional[int]) -> int:
+    """bytes of shapes that look like attention scores: trailing dim == seq
+    and second-to-last a positive multiple of seq (covers (B,H,S,S) and the
+    (B,H*S,S) reshapes)."""
+    if not seq:
+        return 0
+    total = 0
+    for d, dims in shapes:
+        parts = [int(x) for x in dims.split(",") if x]
+        if len(parts) >= 2 and parts[-1] == seq and parts[-2] % seq == 0 \
+                and parts[-2] > 0:
+            total += _shape_bytes(d, dims)
+    return total
+
+
+def _cost_comp(comps: Dict[str, Comp], comp: Comp,
+               fusion_memo: Dict[str, Tuple[Dict[str, str], int]],
+               seq: Optional[int] = None):
+    """(flops, mem, coll, coll_by_kind) for one computation body, treating
+    fusion calls with the single-pass model and skipping free ops."""
+    fl = mem = coll = 0.0
+    score = 0.0
+    ckind: Dict[str, float] = {}
+    for ln in comp.lines:
+        opnd_shapes: List[List[Tuple[str, str]]] = [
+            comp.symbols.get(o, []) for o in ln.opnds]
+        flat_opnds = [s for sub in opnd_shapes for s in sub]
+        if ln.op == "dot":
+            fl += _dot_flops(comp, ln)
+            mem += _shape_list_bytes(ln.res_shapes) + _shape_list_bytes(flat_opnds)
+            score += _score_bytes(ln.res_shapes, seq) + _score_bytes(flat_opnds, seq)
+        elif ln.op == "convolution":
+            res_elems = sum(_shape_elems(s) for _, s in ln.res_shapes)
+            if flat_opnds:
+                fl += 2.0 * res_elems * _shape_elems(flat_opnds[-1][1])
+            mem += _shape_list_bytes(ln.res_shapes) + _shape_list_bytes(flat_opnds)
+        elif ln.op == "fusion":
+            body = re.search(r"calls=%?([\w\.\-]+)", ln.rhs)
+            if body:
+                mem += _fusion_mem(comps, body.group(1), opnd_shapes, fusion_memo)
+                score += _score_bytes(ln.res_shapes, seq) + \
+                    _score_bytes(flat_opnds, seq)
+        elif any(c in ln.op for c in _COLLECTIVES):
+            kind = next(c for c in _COLLECTIVES if c in ln.op)
+            nbytes = _shape_list_bytes(flat_opnds)
+            coll += nbytes
+            ckind[kind] = ckind.get(kind, 0.0) + nbytes
+            mem += nbytes + _shape_list_bytes(ln.res_shapes)
+        elif ln.op == "dynamic-update-slice":
+            upd = comp.symbols.get(ln.opnds[1], []) if len(ln.opnds) > 1 else []
+            mem += 2 * _shape_list_bytes(upd)
+        elif ln.op in _SLICE_OPS:
+            mem += 2 * _shape_list_bytes(ln.res_shapes)
+        elif ln.op == "scatter":
+            upd = comp.symbols.get(ln.opnds[-1], []) if ln.opnds else []
+            mem += 3 * _shape_list_bytes(upd)
+        elif ln.op in _FREE_OPS or not ln.op:
+            pass
+        else:
+            mem += _shape_list_bytes(ln.res_shapes) + _shape_list_bytes(flat_opnds)
+            score += _score_bytes(ln.res_shapes, seq) + _score_bytes(flat_opnds, seq)
+    return fl, mem, coll, ckind, score
+
+
+def _fusion_flops(comps: Dict[str, Comp], name: str, memo: Dict[str, float]) -> float:
+    """dots can appear inside fusion/call bodies — count them (flops only)."""
+    if name in memo:
+        return memo[name]
+    comp = comps.get(name)
+    if comp is None:
+        return 0.0
+    memo[name] = 0.0
+    fl = 0.0
+    for ln in comp.lines:
+        if ln.op == "dot":
+            fl += _dot_flops(comp, ln)
+        elif ln.op == "fusion":
+            body = re.search(r"calls=%?([\w\.\-]+)", ln.rhs)
+            if body:
+                fl += _fusion_flops(comps, body.group(1), memo)
+    memo[name] = fl
+    return fl
+
+
+def analyze_hlo(text: str, raw_cost: Optional[Dict[str, float]] = None,
+                seq_len: Optional[int] = None) -> HloCost:
+    comps, entry = parse_module(text)
+    if entry is None:
+        called = {c for comp in comps.values() for c in comp.calls}
+        called |= {b for comp in comps.values() for b, _ in comp.while_children}
+        called |= {c for comp in comps.values() for _, c in comp.while_children}
+        entry = next((nm for nm in comps if nm not in called), None)
+
+    fusion_memo: Dict[str, Tuple[Dict[str, str], int]] = {}
+    fusion_fl_memo: Dict[str, float] = {}
+    loops: List[Tuple[str, int]] = []
+    agg_memo: Dict[str, tuple] = {}
+
+    def aggregate(name: str):
+        if name in agg_memo:
+            return agg_memo[name]
+        comp = comps.get(name)
+        if comp is None:
+            return (0.0, 0.0, 0.0, {}, 0.0)
+        agg_memo[name] = (0.0, 0.0, 0.0, {}, 0.0)
+        fl, mem, coll, ckind, score = _cost_comp(comps, comp, fusion_memo,
+                                                 seq_len)
+        ckind = dict(ckind)
+        for ln in comp.lines:
+            if ln.op == "fusion":
+                body = re.search(r"calls=%?([\w\.\-]+)", ln.rhs)
+                if body:
+                    fl += _fusion_flops(comps, body.group(1), fusion_fl_memo)
+        for child in comp.calls:
+            cf, cm, cc, ck, _cs = aggregate(child)
+            # non-fusion calls (reduce bodies etc.): flops + collectives only
+            child_comp = comps.get(child)
+            if child_comp is not None and child not in {
+                    re.search(r"calls=%?([\w\.\-]+)", l.rhs).group(1)
+                    for l in comp.lines if l.op == "fusion"
+                    and re.search(r"calls=%?([\w\.\-]+)", l.rhs)}:
+                fl += cf
+                coll += cc
+                for k, v in ck.items():
+                    ckind[k] = ckind.get(k, 0) + v
+        for body, cond in comp.while_children:
+            n = _trip_count(comps, cond)
+            loops.append((body, n))
+            bf, bm, bc, bk, bs = aggregate(body)
+            fl += n * bf
+            mem += n * bm
+            coll += n * bc
+            score += n * bs
+            for k, v in bk.items():
+                ckind[k] = ckind.get(k, 0) + n * v
+        agg_memo[name] = (fl, mem, coll, ckind, score)
+        return agg_memo[name]
+
+    fl, mem, coll, ckind, score = aggregate(entry) if entry \
+        else (0.0, 0.0, 0.0, {}, 0.0)
+    return HloCost(flops=fl, mem_bytes=mem, coll_bytes=coll, coll_by_kind=ckind,
+                   loops=loops, raw_cost_analysis=dict(raw_cost or {}),
+                   score_bytes=score)
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e per-chip constants; see EXPERIMENTS.md §Roofline)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per-chip effective)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    mem_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    model_flops: float = 0.0   # analytic, per chip
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bounding term: the score we hillclimb.
+        = (model_flops/peak) / max(compute_s, memory_s, collective_s)."""
+        if not self.bound_s:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.bound_s
+
+
+def roofline_terms(cost: HloCost, *, model_flops_per_chip: float = 0.0) -> Roofline:
+    """cost is per-partition (post-SPMD module) -> per-chip seconds."""
+    return Roofline(
+        compute_s=cost.flops / PEAK_FLOPS,
+        memory_s=cost.mem_bytes / HBM_BW,
+        collective_s=cost.coll_bytes / ICI_BW,
+        flops=cost.flops, mem_bytes=cost.mem_bytes, coll_bytes=cost.coll_bytes,
+        coll_by_kind=cost.coll_by_kind,
+        model_flops=model_flops_per_chip,
+    )

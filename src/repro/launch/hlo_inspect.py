@@ -1,0 +1,92 @@
+"""Profiling aid for the hillclimb loop: rank ops by their trip-count-scaled
+contribution to the memory term, under the same fused single-pass model as
+hlo_analysis.
+
+  PYTHONPATH=src python -m repro.launch.hlo_inspect /tmp/foo.hlo [--top 20]
+
+(Generate the .hlo with `python -m repro.launch.dryrun ... --keep-hlo`.)
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from typing import Dict, List, Tuple
+
+from .hlo_analysis import (_COLLECTIVES, _FREE_OPS, _SLICE_OPS,
+                           _fusion_mem, _shape_list_bytes, _trip_count,
+                           analyze_hlo, parse_module)
+
+
+def _multipliers(comps, entry) -> Dict[str, int]:
+    mult: Dict[str, int] = {}
+
+    def walk(name: str, m: int):
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for child in comp.calls:
+            walk(child, m)
+        for body, cond in comp.while_children:
+            walk(body, m * _trip_count(comps, cond))
+    if entry:
+        walk(entry, 1)
+    return mult
+
+
+def top_ops(text: str, top: int = 25) -> List[Tuple[float, str, str]]:
+    comps, entry = parse_module(text)
+    mult = _multipliers(comps, entry)
+    fusion_memo: Dict[str, tuple] = {}
+    rows: List[Tuple[float, str, str]] = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue
+        for ln in comp.lines:
+            flat_opnds = [s for o in ln.opnds for s in comp.symbols.get(o, [])]
+            if ln.op == "fusion":
+                body = re.search(r"calls=%?([\w\.\-]+)", ln.rhs)
+                nbytes = _fusion_mem(comps, body.group(1), [], fusion_memo) \
+                    if body else 0
+            elif any(c in ln.op for c in _COLLECTIVES):
+                nbytes = _shape_list_bytes(flat_opnds) + \
+                    _shape_list_bytes(ln.res_shapes)
+            elif ln.op == "dynamic-update-slice":
+                upd = comp.symbols.get(ln.opnds[1], []) if len(ln.opnds) > 1 else []
+                nbytes = 2 * _shape_list_bytes(upd)
+            elif ln.op in _SLICE_OPS:
+                nbytes = 2 * _shape_list_bytes(ln.res_shapes)
+            elif ln.op in _FREE_OPS or not ln.op:
+                continue
+            else:
+                nbytes = _shape_list_bytes(ln.res_shapes) + \
+                    _shape_list_bytes(flat_opnds)
+            scaled = nbytes * m
+            if scaled > 0:
+                rows.append((scaled, ln.op,
+                             f"x{m} {cname[:26]:26s} {ln.rhs[:110]}"))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:top]
+
+
+def summarize(path: str, top: int = 25) -> None:
+    text = open(path).read()
+    cost = analyze_hlo(text)
+    print(f"flops={cost.flops:.3e}  mem={cost.mem_bytes:.3e}B  "
+          f"coll={cost.coll_bytes:.3e}B")
+    print("loops:", cost.loops[:12])
+    print("collectives by kind:", {k: f"{v:.2e}" for k, v in cost.coll_by_kind.items()})
+    print(f"\ntop {top} ops by trip-scaled memory bytes:")
+    for nbytes, op, line in top_ops(text, top):
+        print(f"{nbytes/1e9:10.2f} GB  {op:20s} {line[:150]}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_path")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    summarize(args.hlo_path, args.top)

@@ -1,0 +1,3 @@
+"""repro.optim — optimizer substrate (AdamW, schedules, grad compression)."""
+from .adamw import (OptConfig, adamw_update, clip_by_global_norm, global_norm,
+                    init_opt_state, opt_state_shapes, schedule)

@@ -1,0 +1,120 @@
+"""AdamW with mixed precision, global-norm clipping and warmup-cosine schedule.
+
+Monoid hooks (the paper's §3 SGD observation, generalized):
+
+* Gradients are a Sum monoid over microbatches and over data-parallel shards
+  — accumulation order is free, which is what makes grad-accumulation scans
+  (:func:`repro.core.aggregation.grad_accum_fold`) and hierarchical
+  cross-pod reduction legal.
+* The optimizer *state* (m, v) is NOT a monoid in the update — Adam's
+  normalizer is order-sensitive — but parameter *deltas* under addition are,
+  which is what the error-feedback compression in ``optim/compress.py``
+  exploits.
+
+Master weights / m / v are fp32, sharded exactly like the bf16 params (the
+TRAIN_RULES already 2D-shard big tensors over (data, model), so optimizer
+state is ZeRO-sharded 256-way for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_ratio * peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def init_opt_state(params: Pytree) -> Dict[str, Pytree]:
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": f32(params),
+        "v": f32(params),
+        "master": jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), params),
+    }
+
+
+def opt_state_shapes(param_shapes: Pytree) -> Dict[str, Pytree]:
+    """Abstract opt state (dry-run path)."""
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    return {"step": jax.ShapeDtypeStruct((), jnp.int32),
+            "m": f32(param_shapes), "v": f32(param_shapes),
+            "master": f32(param_shapes)}
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> Tuple[Pytree, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads: Pytree, opt_state: Dict[str, Pytree], cfg: OptConfig,
+                 *, grad_scale: float = 1.0
+                 ) -> Tuple[Pytree, Dict[str, Pytree], Dict[str, jnp.ndarray]]:
+    """One AdamW step. Returns (new bf16-cast params, new state, opt metrics).
+
+    grad_scale divides the summed gradients (the `extract` of the grad-Sum
+    monoid — e.g. 1/num_microbatches after grad_accum_fold).
+    """
+    step = opt_state["step"] + 1
+    lr = schedule(cfg, step)
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * grad_scale, grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(m, v, g, p):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p
+        return m, v, p - lr * delta
+
+    flat_m, treedef = jax.tree_util.tree_flatten(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_p = jax.tree_util.tree_leaves(opt_state["master"])
+    out = [upd(m, v, g, p) for m, v, g, p in zip(flat_m, flat_v, flat_g, flat_p)]
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree_util.tree_map(lambda x: x.astype(jnp.bfloat16), new_master)
+    new_state = {"step": step, "m": new_m, "v": new_v, "master": new_master}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

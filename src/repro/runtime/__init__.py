@@ -1,0 +1,4 @@
+"""repro.runtime — fault tolerance: preemption, elastic re-mesh, stragglers."""
+from .fault_tolerance import (ElasticController, MeshPlan, PreemptionHandler,
+                              StragglerMonitor, StragglerReport,
+                              checkpoint_interval, plan_remesh)

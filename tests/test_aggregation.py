@@ -1,0 +1,70 @@
+"""Folding machinery: tree/scan folds, segment folds, byte accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import monoids, tree_fold, scan_fold, fold_map, segment_fold, tree_bytes
+from repro.core.aggregation import allreduce_wire_bytes
+
+
+@pytest.mark.parametrize("n", [1, 2, 7, 16, 33])
+def test_tree_fold_equals_scan_fold(n):
+    rng = np.random.default_rng(n)
+    xs = jnp.asarray(rng.normal(size=(n, 5)).astype(np.float32))
+    t = tree_fold(monoids.sum_, xs)
+    s = scan_fold(monoids.sum_, xs)
+    np.testing.assert_allclose(np.asarray(t), np.asarray(s), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(t), xs.sum(0), rtol=1e-5)
+
+
+def test_tree_fold_noncommutative_order():
+    """affine_scan is order-sensitive: folds must preserve sequence order."""
+    rng = np.random.default_rng(0)
+    n = 13
+    a = jnp.asarray(rng.uniform(0.5, 1.0, n).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    t = tree_fold(monoids.affine_scan, (a, b))
+    s = scan_fold(monoids.affine_scan, (a, b))
+    np.testing.assert_allclose(np.asarray(t[0]), np.asarray(s[0]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(t[1]), np.asarray(s[1]), rtol=1e-4, atol=1e-5)
+
+
+def test_fold_map_strategies_match():
+    xs = jnp.arange(24, dtype=jnp.float32)
+    fn = lambda x: x * 2 + 1
+    a = fold_map(monoids.mean, fn, xs, strategy="scan")
+    b = fold_map(monoids.mean, fn, xs, strategy="tree")
+    np.testing.assert_allclose(float(monoids.mean.extract(a)),
+                               float(monoids.mean.extract(b)), rtol=1e-6)
+    np.testing.assert_allclose(float(monoids.mean.extract(a)),
+                               float(jnp.mean(fn(xs))), rtol=1e-6)
+
+
+@pytest.mark.parametrize("impl", ["auto", "onehot", "scan"])
+def test_segment_fold_impls_agree(impl):
+    rng = np.random.default_rng(1)
+    vals = jnp.asarray(rng.normal(size=(50, 4)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, 7, 50).astype(np.int32))
+    out = segment_fold(monoids.sum_, vals, segs, 7, impl=impl)
+    oracle = jax.ops.segment_sum(vals, segs, num_segments=7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_segment_fold_generic_monoid():
+    """max monoid through the generic serial path."""
+    rng = np.random.default_rng(2)
+    vals = jnp.asarray(rng.normal(size=(30,)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, 4, 30).astype(np.int32))
+    out = segment_fold(monoids.max_, vals, segs, 4)
+    oracle = jax.ops.segment_max(vals, segs, num_segments=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle), rtol=1e-6)
+
+
+def test_tree_bytes_and_wire_model():
+    t = {"a": jnp.zeros((4, 4), jnp.float32), "b": jnp.zeros((8,), jnp.bfloat16)}
+    assert tree_bytes(t) == 4 * 4 * 4 + 8 * 2
+    assert allreduce_wire_bytes(1000, 1) == 0
+    assert allreduce_wire_bytes(1000, 4, algorithm="ring") == 1500
+    assert allreduce_wire_bytes(1000, 4, algorithm="gather") == 3000

@@ -1,0 +1,203 @@
+"""Multi-device distribution tests, run in subprocesses with 8 fake host
+devices (the main test process must keep seeing 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_distributed(code: str, devices: int = 8, timeout: int = 420):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, cwd=ROOT, timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+assert len(jax.devices()) == 8, jax.devices()
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh2 = jax.make_mesh((4, 2), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+"""
+
+
+def test_sharded_mapreduce_strategies():
+    run_distributed(PRELUDE + """
+from repro.core import average_by_key_job
+rng = np.random.default_rng(0)
+keys = rng.integers(0, 16, 128); vals = rng.normal(size=128).astype(np.float32)
+records = {"key": jnp.asarray(keys), "value": jnp.asarray(vals)}
+job = average_by_key_job(16)
+oracle = np.array([vals[keys==k].mean() if (keys==k).any() else 0.0 for k in range(16)])
+for strat in ("naive", "combiner", "in_mapper"):
+    out = np.asarray(job.run_sharded(records, mesh, strategy=strat))
+    assert np.allclose(out, oracle, atol=1e-5), (strat, out, oracle)
+print("ok")
+""")
+
+
+def test_hierarchical_psum_equals_flat():
+    run_distributed(PRELUDE + """
+from repro.core.aggregation import hierarchical_psum
+from functools import partial
+x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+spec = jax.sharding.PartitionSpec("data")
+
+def flat(v):
+    return jax.lax.psum(v, ("data", "model"))
+
+def hier(v):
+    return hierarchical_psum(v, ici_axis="model", dcn_axis="data")
+
+f1 = jax.shard_map(flat, mesh=mesh2, in_specs=spec, out_specs=spec, check_vma=False)
+f2 = jax.shard_map(hier, mesh=mesh2, in_specs=spec, out_specs=spec, check_vma=False)
+np.testing.assert_allclose(np.asarray(f1(x)), np.asarray(f2(x)), rtol=1e-6)
+print("ok")
+""")
+
+
+def test_monoid_allreduce_attn_state():
+    """Distributed flash-decoding merge == single-device softmax."""
+    run_distributed(PRELUDE + """
+from repro.core import monoids
+from repro.core.aggregation import monoid_allreduce
+rng = np.random.default_rng(1)
+S, d = 64, 4                      # KV length sharded 8 ways
+logits = jnp.asarray(rng.normal(size=(S,)).astype(np.float32))
+v = jnp.asarray(rng.normal(size=(S, d)).astype(np.float32))
+w = jax.nn.softmax(logits)
+want = w @ v
+
+def shard_fn(lg, vv):
+    m = jnp.max(lg)
+    e = jnp.exp(lg - m)
+    state = (m, e.sum(), e @ vv)
+    state = monoid_allreduce(monoids.attn_state, state, "data")
+    return monoids.attn_state.extract(state)
+
+spec = jax.sharding.PartitionSpec("data")
+out = jax.shard_map(shard_fn, mesh=mesh, in_specs=(spec, spec),
+                    out_specs=jax.sharding.PartitionSpec(), check_vma=False)(logits, v)
+np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+print("ok")
+""")
+
+
+def test_moe_replicated_matches_local():
+    run_distributed(PRELUDE + """
+import dataclasses
+from repro.configs import get_config
+from repro.models import init_params
+from repro.models import moe as M
+cfg = dataclasses.replace(get_config("qwen2-moe-a2.7b", smoke=True), dtype=jnp.float32)
+params, _ = init_params(cfg, jax.random.PRNGKey(0))
+ffn = jax.tree_util.tree_map(lambda p: p[0], params["layers"])["slot_0"]["ffn"]
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
+ref, stats_ref = M.moe_ffn_local(ffn, cfg, x)
+out, stats = M.moe_ffn_replicated(ffn, cfg, x, mesh2, axis_name="model",
+                                  batch_axes=("data",))
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+np.testing.assert_array_equal(np.asarray(stats["expert_load"]),
+                              np.asarray(stats_ref["expert_load"]))
+print("ok")
+""")
+
+
+def test_moe_a2a_matches_local():
+    run_distributed(PRELUDE + """
+import dataclasses
+from repro.configs import get_config
+from repro.models import init_params
+from repro.models import moe as M
+cfg = dataclasses.replace(get_config("qwen2-moe-a2.7b", smoke=True),
+                          dtype=jnp.float32, moe_capacity_factor=8.0)
+params, _ = init_params(cfg, jax.random.PRNGKey(0))
+ffn = jax.tree_util.tree_map(lambda p: p[0], params["layers"])["slot_0"]["ffn"]
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
+ref, _ = M.moe_ffn_local(ffn, cfg, x)
+out, stats = M.moe_ffn_a2a(ffn, cfg, x, mesh2, axis_name="model",
+                            batch_axes=("data",))
+assert int(stats["dropped"]) == 0, int(stats["dropped"])
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+print("ok")
+""")
+
+
+def test_flash_decode_shardmap_matches_dense():
+    run_distributed(PRELUDE + """
+import dataclasses
+from repro.configs import get_config
+from repro.models import init_params, ParamBuilder
+from repro.models import attention as A
+cfg = dataclasses.replace(get_config("qwen3-0.6b", smoke=True), dtype=jnp.float32)
+pb = ParamBuilder(jax.random.PRNGKey(0), jnp.float32)
+A.init_attn(pb, cfg)
+p = pb.params
+B, S = 2, 64
+x = jax.random.normal(jax.random.PRNGKey(2), (B, 1, cfg.d_model), jnp.float32)
+k = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.num_kv_heads, cfg.head_dim), jnp.float32)
+v = jax.random.normal(jax.random.PRNGKey(4), (B, S, cfg.num_kv_heads, cfg.head_dim), jnp.float32)
+pos = jnp.int32(40)
+want, (k1, v1) = A.attention_decode(p, cfg, x, (k, v), pos)
+got, (k2, v2) = A.flash_decode_shardmap(p, cfg, x, (k, v), pos, mesh,
+                                        axis_name="data")
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+np.testing.assert_allclose(np.asarray(k2), np.asarray(k1), rtol=1e-5)
+print("ok")
+""")
+
+
+def test_ring_attention_matches_dense():
+    """Ring attention (collective_permute hops folding AttnState) == dense
+    causal softmax attention, on an 8-device ring."""
+    run_distributed(PRELUDE + """
+from repro.models.attention import ring_attention_shardmap
+from repro.kernels import ref
+rng = np.random.default_rng(3)
+B, S, H, d = 2, 64, 4, 16
+q = jnp.asarray(rng.normal(size=(B, S, H, d)).astype(np.float32))
+k = jnp.asarray(rng.normal(size=(B, S, H, d)).astype(np.float32))
+v = jnp.asarray(rng.normal(size=(B, S, H, d)).astype(np.float32))
+got = ring_attention_shardmap(q, k, v, mesh, axis_name="data")
+want = ref.flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3))
+np.testing.assert_allclose(np.asarray(got), np.asarray(want.transpose(0, 2, 1, 3)),
+                           rtol=2e-4, atol=2e-4)
+print("ok")
+""")
+
+
+def test_train_step_multi_device_matches_single():
+    """2-device DP x 2-device TP training step == single-device step."""
+    run_distributed(PRELUDE + """
+import dataclasses
+from repro.configs import get_config, ShapeCell
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.optim import init_opt_state
+cfg = dataclasses.replace(get_config("qwen3-0.6b", smoke=True), dtype=jnp.float32)
+shape = ShapeCell("t", "train", 32, 4)
+mesh1 = jax.make_mesh((1, 1), ("data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+toks = jax.random.randint(jax.random.PRNGKey(5), (4, 32), 0, cfg.vocab_size)
+batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+outs = {}
+for name, m in (("single", mesh1), ("dist", mesh2)):
+    built = make_train_step(cfg, m, shape, donate=False)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0))
+    params = jax.device_put(params, built.in_shardings[0])
+    opt = jax.device_put(init_opt_state(params), built.in_shardings[1])
+    _, _, metrics = built.fn(params, opt, batch)
+    outs[name] = {k: float(v) for k, v in metrics.items()}
+for k in ("loss", "grad_norm"):
+    a, b = outs["single"][k], outs["dist"][k]
+    assert abs(a - b) / max(abs(a), 1e-6) < 5e-3, (k, a, b)
+print("ok", outs["dist"]["loss"])
+""")

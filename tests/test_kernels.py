@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (hypothesis) +
+interpret-mode allclose. Each kernel is the paper's combiner on a different
+hot spot (DESIGN.md §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(10, 400), d=st.integers(1, 40), s=st.integers(2, 24),
+       block=st.sampled_from([64, 128, 256]))
+def test_segment_fold_sweep(n, d, s, block):
+    rng = np.random.default_rng(n * d)
+    vals = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    got = ops.segment_fold(vals, segs, s, block_n=block)
+    want = ref.segment_fold_ref(vals, segs, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_segment_fold_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=(200, 16)).astype(np.float32)).astype(dtype)
+    segs = jnp.asarray(rng.integers(0, 8, 200).astype(np.int32))
+    got = ops.segment_fold(vals, segs, 8, block_n=64)
+    want = ref.segment_fold_ref(vals.astype(jnp.float32), segs, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_mean_by_key_kernel_is_paper_example():
+    rng = np.random.default_rng(1)
+    vals = jnp.asarray(rng.normal(size=(300, 1)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, 8, 300).astype(np.int32))
+    got = ops.mean_by_key(vals, segs, 8, block_n=128)
+    sums, counts = ref.segment_fold_ref(vals, segs, 8, with_count=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(sums / np.maximum(counts, 1)[:, None]),
+        rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(50, 2000), depth=st.integers(1, 5),
+       width=st.sampled_from([128, 256, 512]))
+def test_cms_kernel_sweep(n, depth, width):
+    rng = np.random.default_rng(n)
+    toks = jnp.asarray(rng.integers(0, 10000, n).astype(np.int32))
+    got = ops.cms_update(toks, depth, width, block_n=256)
+    want = ref.cms_update_ref(toks, depth, width)
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  np.asarray(want, np.int64))
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(20, 600), vocab=st.sampled_from([32, 64, 128]),
+       window=st.integers(1, 5))
+def test_stripes_kernel_sweep(n, vocab, window):
+    rng = np.random.default_rng(n + vocab)
+    toks = jnp.asarray(rng.integers(0, vocab, n).astype(np.int32))
+    got = ops.stripes(toks, vocab, window, block_n=128)
+    want = ref.stripes_ref(toks, vocab, window)
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  np.asarray(want, np.int64))
+
+
+@pytest.mark.parametrize("B,H,KV,S,d,bq,bk", [
+    (1, 2, 2, 128, 32, 64, 64),     # MHA
+    (2, 4, 2, 128, 64, 128, 64),    # GQA 2:1
+    (1, 8, 2, 256, 64, 64, 128),    # GQA 4:1, rectangular blocks
+])
+def test_flash_attention_causal(B, H, KV, S, d, bq, bk):
+    rng = np.random.default_rng(B * H + S)
+    q = jnp.asarray(rng.normal(size=(B, H, S, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, KV, S, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, KV, S, d)).astype(np.float32))
+    got = ops.flash_attn(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_noncausal_and_bf16():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 2, 128, 32)).astype(np.float32)).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 128, 32)).astype(np.float32)).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 128, 32)).astype(np.float32)).astype(jnp.bfloat16)
+    got = ops.flash_attn(q, k, v, causal=False, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=5e-2, atol=5e-2)
+
+
+def test_flash_attention_matches_attn_state_monoid():
+    """The kernel's in-VMEM fold == the monoid fold in repro.core (the same
+    algebra at two layers of the stack)."""
+    from repro.core import monoids
+    rng = np.random.default_rng(9)
+    S, d = 64, 16
+    q = jnp.asarray(rng.normal(size=(1, 1, S, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, S, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1, S, d)).astype(np.float32))
+    got = ops.flash_attn(q, k, v, causal=False, block_q=32, block_k=32)
+    # monoid fold over two KV chunks
+    m = monoids.attn_state
+    scale = 1.0 / np.sqrt(d)
+
+    def state(sl):
+        s = (q[0, 0] @ k[0, 0, sl].T) * scale       # (S, chunk)
+        mx = s.max(-1)
+        e = jnp.exp(s - mx[:, None])
+        return (mx, e.sum(-1), e @ v[0, 0, sl])
+
+    acc = m.combine(state(slice(0, 32)), state(slice(32, 64)))
+    np.testing.assert_allclose(np.asarray(got[0, 0]),
+                               np.asarray(m.extract(acc)), rtol=1e-4, atol=1e-4)

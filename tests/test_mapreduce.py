@@ -1,0 +1,105 @@
+"""The paper's algorithms as executable artifacts (Algorithms 1-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MapReduceJob, MonoidTypeError, STRATEGIES,
+                        algorithm2_combiner, average_by_key_job,
+                        cooccurrence_stripes_job, monoids, validate_combiner,
+                        word_count_job)
+
+
+@pytest.fixture(scope="module")
+def records():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 8, 96)
+    vals = rng.normal(size=96).astype(np.float32)
+    oracle = np.array([vals[keys == k].mean() if (keys == k).any() else 0.0
+                       for k in range(8)])
+    return ({"key": jnp.asarray(keys), "value": jnp.asarray(vals)}, oracle)
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("num_shards", [1, 4])
+def test_mean_by_key_all_strategies(records, strategy, num_shards):
+    """Algorithms 1, 3 and 4 all compute the same mean-by-key."""
+    recs, oracle = records
+    job = average_by_key_job(8)
+    out = np.asarray(job.run_local(recs, strategy=strategy,
+                                   num_shards=num_shards))
+    np.testing.assert_allclose(out, oracle, atol=1e-5)
+
+
+def test_algorithm2_rejected(records):
+    """The paper's Algorithm 2 combiner (int -> (sum,count)) violates the
+    combiner contract and the engine rejects it."""
+    job = average_by_key_job(8)
+    with pytest.raises(MonoidTypeError):
+        validate_combiner(job.monoid, jnp.float32(1.0), algorithm2_combiner)
+
+
+def test_legal_combiner_accepted():
+    validate_combiner(monoids.mean, monoids.mean.lift(jnp.float32(1.0)))
+
+
+def test_shuffle_accounting_ordering(records):
+    """The paper's efficiency claim: bytes(naive) >= bytes(combiner) ==
+    bytes(in_mapper); materialization(in_mapper) < materialization(combiner)."""
+    recs, _ = records
+    job = average_by_key_job(8)
+    st = {s: job.stats(recs, strategy=s, num_shards=4) for s in STRATEGIES}
+    assert st["naive"].shuffle_bytes_mapreduce >= st["combiner"].shuffle_bytes_mapreduce
+    assert st["combiner"].shuffle_bytes_mapreduce == st["in_mapper"].shuffle_bytes_mapreduce
+    assert st["in_mapper"].intermediate_values < st["combiner"].intermediate_values
+    assert st["naive"].reduction_vs_naive() == 1.0
+    assert st["in_mapper"].reduction_vs_naive() > 1.0
+
+
+def test_word_count(records):
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, 50, 400)
+    job = word_count_job(50)
+    for s in STRATEGIES:
+        out = np.asarray(job.run_local(jnp.asarray(toks), strategy=s,
+                                       num_shards=4))
+        np.testing.assert_array_equal(out, np.bincount(toks, minlength=50))
+
+
+def test_stripes_cooccurrence_job():
+    """Algorithm 5: windowed co-occurrence via the stripes monoid."""
+    rng = np.random.default_rng(2)
+    vocab, window, n = 16, 2, 64
+    toks = rng.integers(0, vocab, n)
+    wins = np.stack([toks[i - window:i + window + 1]
+                     for i in range(window, n - window)])
+    job = cooccurrence_stripes_job(vocab, window)
+    out = np.asarray(job.run_local(jnp.asarray(wins), strategy="in_mapper",
+                                   num_shards=4))
+    # oracle: count neighbors within the window for each interior center
+    oracle = np.zeros((vocab, vocab), np.int64)
+    for i in range(window, n - window):
+        for off in range(-window, window + 1):
+            if off != 0:
+                oracle[toks[i], toks[i + off]] += 1
+    np.testing.assert_array_equal(out, oracle)
+
+
+def test_strategies_agree_on_random_monoid_jobs():
+    """max-by-key with the max monoid (non-additive path)."""
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 5, 64)
+    vals = rng.normal(size=64).astype(np.float32)
+
+    def mapper(rec):
+        return rec["key"], rec["value"]
+
+    job = MapReduceJob(mapper=mapper, monoid=monoids.max_, num_keys=5)
+    recs = {"key": jnp.asarray(keys), "value": jnp.asarray(vals)}
+    outs = [np.asarray(job.run_local(recs, strategy=s, num_shards=4))
+            for s in STRATEGIES]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, atol=1e-6)
+    oracle = np.array([vals[keys == k].max() if (keys == k).any() else -np.inf
+                       for k in range(5)])
+    np.testing.assert_allclose(outs[0], oracle, atol=1e-6)

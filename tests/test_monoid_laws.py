@@ -1,0 +1,158 @@
+"""Property tests: every monoid in the zoo satisfies the monoid laws.
+
+The laws (associativity, two-sided identity, declared commutativity,
+structure preservation) are exactly what licenses combiners/in-mapper
+combining (paper §2) — so they are the system's core invariant.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import monoids, check_laws
+from repro.core.monoid import Monoid, MonoidTypeError, check_structure
+
+finite_f = st.floats(min_value=-50, max_value=50, allow_nan=False,
+                     allow_infinity=False, width=32)
+
+
+def arrays(draw, shape, lo=-50, hi=50):
+    return jnp.asarray(np.array(
+        [draw(finite_f) for _ in range(int(np.prod(shape)))],
+        np.float32).reshape(shape))
+
+
+@st.composite
+def float_vectors(draw, n=3, dim=4):
+    return [arrays(draw, (dim,)) for _ in range(n)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(float_vectors())
+def test_sum_laws(xs):
+    check_laws(monoids.sum_, xs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(float_vectors())
+def test_max_min_laws(xs):
+    check_laws(monoids.max_, xs)
+    check_laws(monoids.min_, xs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(finite_f, st.integers(1, 100)), min_size=3, max_size=3))
+def test_mean_laws_and_extract(pairs):
+    samples = [(jnp.float32(s), jnp.int32(c)) for s, c in pairs]
+    check_laws(monoids.mean, samples)
+    # extract(combine(lift(x_i))) == mean(x_i)
+    xs = [p[0] for p in pairs]
+    lifted = [monoids.mean.lift(jnp.float32(x)) for x in xs]
+    acc = monoids.mean.identity_like(lifted[0])
+    for l in lifted:
+        acc = monoids.mean.combine(acc, l)
+    np.testing.assert_allclose(monoids.mean.extract(acc), np.mean(xs), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.lists(finite_f, min_size=1, max_size=20),
+                min_size=2, max_size=4))
+def test_welford_matches_numpy(groups):
+    m = monoids.welford
+    acc = None
+    allv = []
+    for g in groups:
+        allv.extend(g)
+        arr = jnp.asarray(np.array(g, np.float32))
+        part = (jnp.float32(len(g)), jnp.mean(arr), jnp.var(arr) * len(g))
+        acc = part if acc is None else m.combine(acc, part)
+    out = m.extract(acc)
+    np.testing.assert_allclose(float(out["mean"]), np.mean(allv), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(out["var"]), np.var(allv), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(finite_f, min_size=6, max_size=6))
+def test_logsumexp_monoid(vals):
+    m = monoids.logsumexp
+    samples = [m.lift(jnp.float32(v)) for v in vals]
+    check_laws(m, samples, rtol=1e-4, atol=1e-4)
+    acc = samples[0]
+    for s in samples[1:]:
+        acc = m.combine(acc, s)
+    np.testing.assert_allclose(float(m.extract(acc)),
+                               float(jax.nn.logsumexp(jnp.asarray(vals))),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attn_state_monoid_rebracketing():
+    """Any chunking of the KV axis yields the same attention output."""
+    rng = np.random.default_rng(0)
+    S, d = 32, 8
+    logits = jnp.asarray(rng.normal(size=(S,)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(S, d)).astype(np.float32))
+    m = monoids.attn_state
+
+    def state_of(sl):
+        mx = jnp.max(logits[sl])
+        e = jnp.exp(logits[sl] - mx)
+        return (mx, e.sum(), (e[:, None] * v[sl]).sum(0))
+
+    full = m.extract(state_of(slice(0, S)))
+    for chunks in ([8, 8, 8, 8], [16, 16], [4, 12, 16], [1] + [31]):
+        acc = m.identity_like(state_of(slice(0, 1)))
+        start = 0
+        for c in chunks:
+            acc = m.combine(acc, state_of(slice(start, start + c)))
+            start += c
+        np.testing.assert_allclose(np.asarray(m.extract(acc)), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+    # associativity/identity laws on random states
+    samples = [state_of(slice(a, b)) for a, b in [(0, 8), (8, 20), (20, 32)]]
+    check_laws(m, samples, rtol=1e-4, atol=1e-4)
+
+
+def test_affine_scan_is_linear_recurrence():
+    """Composition order: fold of (a,b) pairs == serial h = a*h + b."""
+    rng = np.random.default_rng(1)
+    n = 17
+    a = jnp.asarray(rng.uniform(0.5, 1.0, n).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    m = monoids.affine_scan
+    h = jnp.float32(0.7)
+    for i in range(n):
+        h = a[i] * h + b[i]
+    acc = m.identity_like((a[0], b[0]))
+    for i in range(n):
+        acc = m.combine(acc, (a[i], b[i]))
+    np.testing.assert_allclose(float(acc[0] * 0.7 + acc[1]), float(h), rtol=1e-5)
+    # NOT commutative
+    s1 = m.combine((a[0], b[0]), (a[1], b[1]))
+    s2 = m.combine((a[1], b[1]), (a[0], b[0]))
+    assert not np.allclose(s1[1], s2[1])
+
+
+def test_topk_monoid():
+    m = monoids.top_k(3)
+    s1 = (jnp.asarray([9., 5., 1.]), jnp.asarray([0, 1, 2], jnp.int32))
+    s2 = (jnp.asarray([7., 6., 2.]), jnp.asarray([3, 4, 5], jnp.int32))
+    v, i = m.combine(s1, s2)
+    np.testing.assert_array_equal(np.asarray(v), [9., 7., 6.])
+    np.testing.assert_array_equal(np.asarray(i), [0, 3, 4])
+    check_laws(m, [s1, s2], rtol=1e-6)
+
+
+def test_product_monoid_single_collective_shape():
+    m = monoids.product(loss=monoids.mean, mx=monoids.max_)
+    a = {"loss": monoids.mean.lift(jnp.float32(2.0)), "mx": jnp.float32(5.0)}
+    b = {"loss": monoids.mean.lift(jnp.float32(4.0)), "mx": jnp.float32(3.0)}
+    out = m.extract(m.combine(a, b))
+    assert float(out["loss"]) == 3.0 and float(out["mx"]) == 5.0
+
+
+def test_structure_check_rejects_shape_change():
+    bad = Monoid(name="bad", combine=lambda a, b: jnp.concatenate([a, b]),
+                 identity_fn=lambda *, example=None: jnp.zeros((2,)))
+    with pytest.raises(MonoidTypeError):
+        check_structure(bad, jnp.zeros((2,)), jnp.zeros((2,)))

