@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fold_map, monoids, scan_fold, tree_fold
+from repro.core import monoids, scan_fold, tree_fold
 from repro.core.aggregation import allreduce_wire_bytes, grad_accum_fold, tree_bytes
 from repro.optim.compress import (compressed_bytes, init_error_state,
                                   int8_compress, topk_compress)

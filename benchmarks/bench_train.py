@@ -1,6 +1,5 @@
 """Training-step throughput on the smoke configs (CPU wall-clock — the
 per-arch structural numbers for the real mesh come from the roofline table)."""
-import dataclasses
 import time
 
 import jax

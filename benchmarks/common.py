@@ -1,10 +1,17 @@
-"""Timing harness for the benchmark suite (CSV: name,us_per_call,derived)."""
+"""Timing harness for the benchmark suite (CSV: name,us_per_call,derived).
+
+Every row printed through :func:`row` is also recorded in :data:`ROWS`, so
+``benchmarks/run.py --json`` can dump the whole run as a machine-readable
+artifact (the ``BENCH_*.json`` files CI uploads per commit).
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Callable, Dict, List
 
 import jax
+
+ROWS: List[Dict[str, object]] = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -21,4 +28,5 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def row(name: str, us: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us_per_call": round(us, 1), "derived": derived})
     print(f"{name},{us:.1f},{derived}")

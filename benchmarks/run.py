@@ -3,24 +3,56 @@
 Prints ``name,us_per_call,derived`` CSV rows. The roofline table (the per-
 (arch x shape x mesh) structural numbers) is rendered separately by
 ``python -m benchmarks.roofline`` from the dry-run JSONs.
+
+``--quick`` runs only the fast algorithm/aggregation/sketch sections (the
+CI bench-smoke job); ``--json PATH`` additionally writes every row to a
+``BENCH_*.json`` artifact so the perf trajectory accumulates per commit.
 """
+import argparse
+import json
+import platform
+import sys
+
 from . import (bench_aggregation, bench_kernels, bench_mapreduce,
                bench_sketches, bench_train)
+from . import common
 
 
-def main() -> None:
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fast sections only (CI bench-smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to a BENCH_*.json artifact")
+    args = ap.parse_args(argv)
+
     print("name,us_per_call,derived")
     print("# -- Algorithms 1/3/4: mean-by-key & word count ------------------")
     bench_mapreduce.main()
-    print("# -- Pallas kernels vs XLA refs (interpret mode on CPU) ----------")
-    bench_kernels.main()
     print("# -- aggregation layer: folds, grad accum, metrics, compression --")
     bench_aggregation.main()
     print("# -- sketch monoids (paper section 3) ----------------------------")
     bench_sketches.main()
-    print("# -- end-to-end train step (smoke configs, CPU) ------------------")
-    bench_train.main()
+    if not args.quick:
+        print("# -- Pallas kernels vs XLA refs (interpret mode on CPU) ----------")
+        bench_kernels.main()
+        print("# -- end-to-end train step (smoke configs, CPU) ------------------")
+        bench_train.main()
+
+    if args.json:
+        import jax
+        payload = {
+            "quick": args.quick,
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "platform": platform.platform(),
+            "rows": common.ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.json} ({len(common.ROWS)} rows)")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

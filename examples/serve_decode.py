@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import context_spec, get_config
-from repro.models import decode_step, forward, init_cache, init_params, unembed
+from repro.models import decode_step, init_cache, init_params
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="qwen3-0.6b")

@@ -8,7 +8,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300] [--dim 512]
 TrainerConfig drives the production mesh via launch/steps.py.)
 """
 import argparse
-import dataclasses
 
 import repro.configs as configs
 from repro.models import ModelConfig

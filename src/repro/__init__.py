@@ -13,4 +13,6 @@ Subpackages:
   kernels     Pallas TPU kernels (+ interpret-mode validation)
   launch      meshes, step builders, dry-run, roofline analyzer
 """
+from . import _compat  # noqa: F401  (installs jax API shims; must run first)
+
 __version__ = "0.1.0"

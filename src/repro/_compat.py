@@ -1,0 +1,74 @@
+"""JAX version compatibility shims.
+
+The codebase is written against the modern JAX API surface
+(``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``, ``jax.lax.axis_size``).  Older jaxlibs (the pinned CI
+toolchain ships 0.4.x) expose the same functionality under different names:
+``jax.experimental.shard_map.shard_map(check_rep=...)`` instead of
+``jax.shard_map(check_vma=...)`` and no axis-type machinery at all (every
+mesh axis behaves as ``Auto``).
+
+:func:`install` forward-ports those names onto the ``jax`` module, so the
+rest of the codebase — and the test suite's subprocess snippets — can use
+one spelling everywhere.  On a new-enough JAX this is a no-op.  It runs once
+at ``import repro`` and is idempotent.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _wrap_check_vma(_sm):
+    """Adapt a shard_map whose knob is still called ``check_rep``."""
+
+    @functools.wraps(_sm)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+        kw.setdefault("check_rep", check_vma)
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+    return shard_map
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for ``jax.sharding.AxisType`` (Auto is the 0.4.x behaviour)."""
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _make_mesh_compat(real_make_mesh):
+    @functools.wraps(real_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        # 0.4.x meshes are implicitly Auto on every axis; Explicit sharding
+        # does not exist there, so the hint is validated and dropped.
+        del axis_types
+        return real_make_mesh(axis_shapes, axis_names, **kw)
+
+    return make_mesh
+
+
+def _axis_size(axis_name):
+    """``jax.lax.axis_size``: psum of the unit is constant-folded to the
+    (static, Python int) size of the named axis."""
+    return jax.lax.psum(1, axis_name)
+
+
+def install() -> None:
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _sm
+        jax.shard_map = _wrap_check_vma(_sm)
+    elif "check_vma" not in inspect.signature(jax.shard_map).parameters:
+        # 0.5.x-0.6.0: top-level shard_map exists but the knob is check_rep
+        jax.shard_map = _wrap_check_vma(jax.shard_map)
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+        jax.make_mesh = _make_mesh_compat(jax.make_mesh)
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = _axis_size
+
+
+install()

@@ -26,11 +26,9 @@ Properties:
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil
-import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Tuple

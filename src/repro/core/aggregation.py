@@ -23,7 +23,6 @@ Everything here is shard_map/jit friendly; nothing allocates outside XLA.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax

@@ -31,9 +31,7 @@ collective bytes on this mesh.
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ we enforce it with :func:`check_structure`.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Optional
 
 import jax

@@ -25,8 +25,7 @@ All monoid values are pytrees of jax arrays. Shape-polymorphic monoids
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Callable, Dict, Sequence, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

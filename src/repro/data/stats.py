@@ -13,7 +13,6 @@ monoid serves the streaming pipeline and any batch job.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict
 
 import jax

@@ -1,0 +1,20 @@
+"""repro.dist — the distribution layer: logical-axis sharding + mesh-aware
+monoid collectives.
+
+Public API:
+  TRAIN_RULES, SERVE_RULES, use_rules, act,
+  spec_for, param_shardings, trim_rules           (sharding.py)
+  ici_axes, dcn_axes, cross_mesh_allreduce,
+  grad_sync, metrics_sync                         (collectives.py)
+"""
+from .sharding import (SERVE_RULES, TRAIN_RULES, act, current_rules,
+                       param_shardings, spec_for, trim_rules, use_rules)
+from .collectives import (cross_mesh_allreduce, dcn_axes, grad_sync, ici_axes,
+                          metrics_sync)
+
+__all__ = [
+    "TRAIN_RULES", "SERVE_RULES", "use_rules", "current_rules", "act",
+    "spec_for", "param_shardings", "trim_rules",
+    "ici_axes", "dcn_axes", "cross_mesh_allreduce", "grad_sync",
+    "metrics_sync",
+]

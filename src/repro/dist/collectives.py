@@ -1,0 +1,78 @@
+"""Mesh-aware monoid collectives: cross the DCN axis once, pre-combined.
+
+``core.aggregation`` knows how to combine a monoid value across *named
+axes*; this module knows which of a mesh's axes are fast (ICI, intra-pod)
+and which are slow (DCN, inter-pod: the ``pod`` axis of
+``launch/mesh.py``), and orders the reduction so the slow axis always sees
+already-combined values — the paper's rack-aware combiner tree
+(in-node combining of PAPERS.md's "In-node Combiners", one level up).
+
+Everything here runs inside ``jax.shard_map``; mesh arguments are used only
+to classify axes, never to launch collectives.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+from jax.sharding import Mesh
+
+from ..core.aggregation import (hierarchical_psum, monoid_allreduce,
+                                monoid_hierarchical_allreduce)
+from ..core.monoid import Monoid, Pytree
+from ..core import monoids
+
+# Mesh axes wired over DCN rather than ICI.  One name today; a future
+# multi-slice topology adds its axes here and every reduction below stays
+# correct by associativity.
+DCN_AXIS_NAMES: Tuple[str, ...] = ("pod",)
+
+
+def dcn_axes(mesh: Mesh, axes: Optional[Sequence[Any]] = None) -> Tuple[Any, ...]:
+    """The slow (cross-pod) axes among ``axes`` (default: all mesh axes)."""
+    names = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+    return tuple(a for a in names if a in DCN_AXIS_NAMES)
+
+
+def ici_axes(mesh: Mesh, axes: Optional[Sequence[Any]] = None) -> Tuple[Any, ...]:
+    """The fast (intra-pod) axes among ``axes`` (default: all mesh axes)."""
+    names = tuple(axes) if axes is not None else tuple(mesh.axis_names)
+    return tuple(a for a in names if a not in DCN_AXIS_NAMES)
+
+
+def cross_mesh_allreduce(m: Monoid, x: Pytree, mesh: Mesh,
+                         axes: Optional[Sequence[Any]] = None) -> Pytree:
+    """Combine a monoid value across mesh axes, fast axes first.
+
+    Re-bracketing the combine as (ICI..., DCN...) is legal by associativity
+    and means each pod sends exactly one pre-combined value over DCN instead
+    of |ici| raw partials.
+    """
+    ordered = ici_axes(mesh, axes) + dcn_axes(mesh, axes)
+    return monoid_hierarchical_allreduce(m, x, ordered)
+
+
+def grad_sync(grads: Pytree, mesh: Mesh,
+              axes: Optional[Sequence[Any]] = None) -> Pytree:
+    """Data-parallel gradient all-reduce for shard_map training loops.
+
+    Inside a pod the sum is reduce-scattered over the fast axis; only the
+    1/|ici| shard crosses DCN (``hierarchical_psum``).  With no DCN axis in
+    the mesh this degrades to a plain hierarchical psum over ICI.
+    """
+    ici = ici_axes(mesh, axes)
+    dcn = dcn_axes(mesh, axes)
+    if not ici and not dcn:
+        return grads
+    if not ici:
+        # pure cross-pod DP (no fast axis to scatter over): one flat psum
+        return monoid_allreduce(monoids.grad_sum, grads, dcn)
+    return hierarchical_psum(
+        grads, ici_axis=ici if len(ici) > 1 else ici[0],
+        dcn_axis=(dcn if len(dcn) > 1 else dcn[0]) if dcn else None)
+
+
+def metrics_sync(metrics: Pytree, mesh: Mesh,
+                 axes: Optional[Sequence[Any]] = None) -> Pytree:
+    """Sum-monoid metric aggregation (loss_sum, tokens, expert_load, ...):
+    one combine per axis, ICI first, so DCN carries a single scalar tree."""
+    return cross_mesh_allreduce(monoids.sum_, metrics, mesh, axes)

@@ -1,0 +1,176 @@
+"""Two-level (MaxText-style) logical sharding.
+
+Models annotate parameters and activations with *logical* axis names
+(``"batch"``, ``"embed"``, ``"mlp"``, ...); this module owns the single
+table mapping logical names to *mesh* axes.  The split keeps every model
+file mesh-agnostic: retargeting the same program from a host mesh to a
+two-pod production mesh is a rule-table change, not a model change.
+
+Mesh axes (see ``launch/mesh.py``):
+
+  ``data``   fast-ICI data parallelism
+  ``model``  fast-ICI tensor / expert / sequence parallelism
+  ``pod``    the slow DCN axis between pods — data-parallel; monoid
+             aggregation (gradients, metrics) crosses it exactly once per
+             step, pre-combined (see ``dist/collectives.py``)
+
+A *rule table* maps each logical name to one mesh axis, a tuple of mesh
+axes, or ``None`` (replicated).  Two tables ship by default: TRAIN_RULES
+(batch over ``pod`` x ``data``; features over ``model``) and SERVE_RULES
+(batch over ``data`` only — serving stays inside one pod).
+
+Divisibility and duplicate mesh axes are resolved structurally in
+:func:`spec_for`: a mesh axis that does not divide the dimension (smoke
+configs, batch=1 decode) or that an earlier dimension already consumed is
+dropped rather than erroring, so one rule table serves every (arch x shape)
+cell.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+Rules = Dict[str, Any]          # logical name -> mesh axis | tuple | None
+
+
+# ---------------------------------------------------------------------------
+# rule tables
+# ---------------------------------------------------------------------------
+
+TRAIN_RULES: Rules = {
+    # -- data dimensions
+    "batch": ("pod", "data"),     # DP across pods (DCN) and within (ICI)
+    "seq": None,                  # override seq="model" for sequence parallel
+    "kv_seq": None,
+    # -- parameter / activation feature dimensions
+    "embed": None,                # residual stream replicated over 'model'
+    "vocab": "model",
+    "mlp": "model",
+    "d_inner": "model",           # SSM/xLSTM inner dim (the 'mlp' of those blocks)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "expert": "model",            # expert parallelism shares the 'model' axis
+    "q_lora": None,
+    "kv_lora": None,
+    "d_state": None,
+    "layers": None,               # stacked scan (period) dimension
+}
+
+# Serving stays within one pod; otherwise the same two-level scheme.
+SERVE_RULES: Rules = dict(TRAIN_RULES, batch=("data",))
+
+
+def _axes_tuple(rule: Any) -> Tuple[str, ...]:
+    """Normalize a rule value (str | tuple | None) to a tuple of mesh axes."""
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        return (rule,)
+    return tuple(rule)
+
+
+def trim_rules(rules: Rules, mesh: Mesh) -> Rules:
+    """Drop mesh axes the current mesh doesn't have (e.g. 'pod' on 1 pod)."""
+    out = {}
+    for k, v in rules.items():
+        axes = tuple(a for a in _axes_tuple(v) if a in mesh.shape)
+        out[k] = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# logical names -> PartitionSpec
+# ---------------------------------------------------------------------------
+
+def spec_for(names: Sequence[Optional[str]], rules: Rules, mesh: Mesh, *,
+             shape: Optional[Tuple[int, ...]] = None) -> P:
+    """PartitionSpec for one tensor's logical names under a rule table.
+
+    Per dimension, mesh axes are kept left-to-right subject to:
+      * the axis exists in ``mesh``;
+      * no earlier dimension already used it (a mesh axis may appear at most
+        once in a PartitionSpec — first logical dimension wins);
+      * if ``shape`` is given, the kept axes' product divides the dimension
+        (smoke configs / batch-1 decode fall back toward replication).
+
+    ``names`` may be shorter than the tensor rank (PartitionSpec semantics:
+    unnamed trailing dimensions are replicated).
+    """
+    names = tuple(names)
+    if shape is not None:
+        assert len(names) <= len(shape), (names, shape)
+    used: set = set()
+    entries = []
+    for i, name in enumerate(names):
+        kept, prod = [], 1
+        for a in _axes_tuple(rules.get(name)) if name is not None else ():
+            if a not in mesh.shape or a in used:
+                continue
+            size = mesh.shape[a]
+            if shape is not None and shape[i] % (prod * size) != 0:
+                continue
+            kept.append(a)
+            used.add(a)
+            prod *= size
+        entries.append(tuple(kept) if len(kept) > 1 else
+                       (kept[0] if kept else None))
+    while entries and entries[-1] is None:   # trailing Nones are noise
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(shapes: Pytree, axes: Pytree, mesh: Mesh,
+                    rules: Rules) -> Pytree:
+    """NamedSharding pytree for a parameter tree.
+
+    ``shapes`` is the ShapeDtypeStruct tree from ``param_shapes``; ``axes``
+    the parallel logical-axes tree from ``param_axes`` (tuple-of-names
+    leaves, e.g. ``("layers", "expert", "embed", "mlp")``).
+    """
+    return jax.tree_util.tree_map(
+        lambda s, ax: NamedSharding(
+            mesh, spec_for(tuple(ax), rules, mesh, shape=s.shape)),
+        shapes, axes)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints
+# ---------------------------------------------------------------------------
+
+# The active (mesh, rules) scope.  Models call act() unconditionally; outside
+# a use_rules() scope (single-device smoke tests, plain jit) it is a no-op,
+# so model code never needs a mesh to run.
+_ACTIVE: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dist_sharding_scope", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Rules):
+    """Activate (mesh, rules) for act() within this (trace-time) scope."""
+    token = _ACTIVE.set((mesh, trim_rules(rules, mesh)))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current_rules() -> Optional[Tuple[Mesh, Rules]]:
+    """The active (mesh, rules), or None outside any use_rules scope."""
+    return _ACTIVE.get()
+
+
+def act(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain an activation's sharding by logical names (no-op when no
+    rules are active).  ``names`` must match ``x``'s rank."""
+    scope = _ACTIVE.get()
+    if scope is None:
+        return x
+    mesh, rules = scope
+    spec = spec_for(tuple(names), rules, mesh, shape=tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

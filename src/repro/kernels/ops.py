@@ -7,7 +7,6 @@ validated in interpret mode against the ref.py oracles).
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

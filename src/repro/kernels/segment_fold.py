@@ -19,7 +19,6 @@ two components ride one matmul.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -33,7 +33,6 @@ terms divide by per-chip peak rates directly.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ShapeCell, context_spec, get_config
-from ..models import RunCtx, init_cache, init_params
+from ..models import init_cache, init_params
 from ..optim import OptConfig  # noqa: F401  (parity of public surface)
 from .mesh import make_host_mesh
 from .steps import make_decode_step

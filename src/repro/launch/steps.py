@@ -17,8 +17,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models import (ModelConfig, RunCtx, decode_step, forward, init_cache,
                       loss_fn, param_axes, param_shapes, unembed)
-from ..models import transformer as tfm
-from ..optim import OptConfig, adamw_update, init_opt_state, opt_state_shapes
+from ..optim import OptConfig, adamw_update, opt_state_shapes
 from ..dist import sharding as shd
 from ..configs import ShapeCell, context_spec, input_specs
 
@@ -29,14 +28,7 @@ Pytree = Any
 # sharding helpers
 # ---------------------------------------------------------------------------
 
-def trim_rules(rules: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
-    """Drop mesh axes the current mesh doesn't have (e.g. 'pod' on 1 pod)."""
-    out = {}
-    for k, v in rules.items():
-        axes = (v,) if isinstance(v, str) else (v or ())
-        axes = tuple(a for a in axes if a in mesh.shape)
-        out[k] = axes if len(axes) > 1 else (axes[0] if axes else None)
-    return out
+trim_rules = shd.trim_rules  # canonical definition lives in dist.sharding
 
 
 def batch_sharding(mesh: Mesh, rules, dim0: Optional[int] = None) -> NamedSharding:

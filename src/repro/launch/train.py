@@ -21,13 +21,11 @@ import jax.numpy as jnp
 from ..configs import ShapeCell, context_spec, get_config
 from ..core import monoids
 from ..checkpoint import CheckpointStore
-from ..data import DataConfig, SyntheticCorpus, Prefetcher
+from ..data import DataConfig, SyntheticCorpus
 from ..data import init_stats, make_stream_stats, update_stats
 from ..models import RunCtx, init_params
-from ..models import transformer as tfm
 from ..optim import OptConfig, init_opt_state
 from ..runtime import PreemptionHandler
-from ..dist import sharding as shd
 from .mesh import make_host_mesh
 from .steps import make_train_step
 

@@ -18,8 +18,7 @@ and decode (1 query against a cache).
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,8 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -18,8 +18,7 @@ state is ZeRO-sharded 256-way for free).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

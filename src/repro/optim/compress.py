@@ -18,9 +18,7 @@ would combine pod-level sparse gradients without densifying.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,7 @@ import dataclasses
 import math
 import signal
 import threading
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -20,6 +19,7 @@ def run_distributed(code: str, devices: int = 8, timeout: int = 420):
 
 
 PRELUDE = """
+import repro  # noqa: F401  (installs the jax API compat shims first)
 import jax, jax.numpy as jnp, numpy as np
 assert len(jax.devices()) == 8, jax.devices()
 mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
@@ -170,6 +170,120 @@ want = ref.flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
                                v.transpose(0, 2, 1, 3))
 np.testing.assert_allclose(np.asarray(got), np.asarray(want.transpose(0, 2, 1, 3)),
                            rtol=2e-4, atol=2e-4)
+print("ok")
+""")
+
+
+def test_sharding_rules_1_device():
+    """trim_rules / spec_for / param_shardings / act on a 1-device mesh (the
+    main test process): everything degrades to replication, and act() is a
+    no-op outside any use_rules scope."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    import jax.numpy as jnp
+    from repro.dist import sharding as shd
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = shd.trim_rules(shd.TRAIN_RULES, mesh)
+    assert rules["batch"] == "data"          # 'pod' dropped: not in this mesh
+    assert rules["mlp"] == "model"
+    assert rules["embed"] is None
+
+    # divisibility: a dim of 3 can't shard over nothing on 1 device anyway,
+    # but the spec machinery must emit clean specs with trailing Nones cut
+    assert shd.spec_for(("batch", "seq", "mlp"), rules, mesh,
+                        shape=(4, 16, 8)) == P("data", None, "model")
+    assert shd.spec_for(("embed",), rules, mesh, shape=(8,)) == P()
+
+    # act() outside use_rules: identity
+    x = jnp.ones((2, 3))
+    assert shd.act(x, ("batch", "embed")) is x
+
+    # act() inside use_rules: applies a constraint without changing values
+    with shd.use_rules(mesh, shd.TRAIN_RULES):
+        y = jax.jit(lambda v: shd.act(v, ("batch", "embed")))(x)
+    assert jnp.allclose(y, x)
+
+    # param_shardings over a real config's param tree
+    from repro.configs import get_config
+    from repro.models import param_axes, param_shapes
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    shard = shd.param_shardings(param_shapes(cfg), param_axes(cfg), mesh, rules)
+    leaves = jax.tree_util.tree_leaves(shard)
+    assert leaves and all(
+        isinstance(s, jax.sharding.NamedSharding) for s in leaves)
+
+
+def test_sharding_rules_8_devices():
+    """Rule tables on a 4x2 mesh: dedupe (expert vs mlp both -> 'model'),
+    divisibility fallback, and that act() inside a jitted use_rules scope
+    actually shards the output."""
+    run_distributed(PRELUDE + """
+from jax.sharding import PartitionSpec as P
+from repro.dist import sharding as shd
+
+rules = shd.trim_rules(shd.TRAIN_RULES, mesh2)
+# first logical dim wins the 'model' axis; the duplicate is dropped
+assert shd.spec_for(("expert", "embed", "mlp"), rules, mesh2,
+                    shape=(8, 16, 32)) == P("model")
+# divisibility: batch=3 not divisible by data=4 -> replicated
+assert shd.spec_for(("batch", "seq"), rules, mesh2, shape=(3, 16)) == P()
+assert shd.spec_for(("batch", "seq"), rules, mesh2, shape=(8, 16)) == P("data")
+
+x = jnp.zeros((8, 16, 64))
+with shd.use_rules(mesh2, shd.TRAIN_RULES):
+    y = jax.jit(lambda v: shd.act(v, ("batch", "seq", "mlp")))(x)
+spec = y.sharding.spec
+assert tuple(spec) in ((("data",), None, ("model",)), ("data", None, "model")), spec
+
+# multi-pod table: batch spans pod x data when the mesh has a pod axis
+mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,)*3)
+r3 = shd.trim_rules(shd.TRAIN_RULES, mesh3)
+assert shd.spec_for(("batch", "seq"), r3, mesh3, shape=(8, 16)) == P(("pod", "data"))
+print("ok")
+""")
+
+
+def test_collectives_cross_dcn_once():
+    """dist.collectives on a (pod, data, model) mesh: the hierarchical
+    monoid reductions equal flat collectives, with the DCN ('pod') axis
+    crossed on pre-combined values."""
+    run_distributed(PRELUDE + """
+from repro.core import monoids
+from repro.dist import collectives as col
+mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                      axis_types=(jax.sharding.AxisType.Auto,)*3)
+assert col.dcn_axes(mesh3) == ("pod",)
+assert col.ici_axes(mesh3) == ("data", "model")
+
+x = jnp.arange(32, dtype=jnp.float32).reshape(8, 4)
+spec = jax.sharding.PartitionSpec("data")
+
+def flat(v):
+    return jax.lax.psum(v, ("pod", "data", "model"))
+
+def hier_grad(v):
+    return col.grad_sync(v, mesh3)
+
+def hier_metrics(v):
+    return col.metrics_sync(v, mesh3)
+
+def hier_max(v):
+    return col.cross_mesh_allreduce(monoids.max_, v, mesh3)
+
+kw = dict(mesh=mesh3, in_specs=spec, out_specs=spec, check_vma=False)
+want = np.asarray(jax.shard_map(flat, **kw)(x))
+for fn in (hier_grad, hier_metrics):
+    got = np.asarray(jax.shard_map(fn, **kw)(x))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+def flat_max(v):
+    return jax.lax.pmax(v, ("pod", "data", "model"))
+
+np.testing.assert_allclose(np.asarray(jax.shard_map(hier_max, **kw)(x)),
+                           np.asarray(jax.shard_map(flat_max, **kw)(x)))
 print("ok")
 """)
 

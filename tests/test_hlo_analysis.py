@@ -6,7 +6,6 @@ the analysis of its unrolled twin (XLA's own cost_analysis fails this by
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
@@ -91,7 +90,7 @@ def test_dus_counted_in_place():
 
 
 def test_roofline_terms_and_fraction():
-    from repro.launch.hlo_analysis import HloCost, PEAK_FLOPS
+    from repro.launch.hlo_analysis import HloCost
     cost = HloCost(flops=197e12, mem_bytes=819e9 / 2, coll_bytes=0.0,
                    coll_by_kind={}, loops=[], raw_cost_analysis={})
     rf = roofline_terms(cost, model_flops_per_chip=197e12 / 2)

@@ -1,5 +1,4 @@
 """The paper's algorithms as executable artifacts (Algorithms 1-5)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

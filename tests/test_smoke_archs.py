@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, context_spec, get_config, valid_cells, SHAPES, input_specs
-from repro.models import decode_step, forward, init_cache, init_params, loss_fn
+from repro.models import decode_step, init_cache, init_params, loss_fn
 from repro.optim import OptConfig, adamw_update, init_opt_state
 
 KEY = jax.random.PRNGKey(0)
