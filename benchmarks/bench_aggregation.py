@@ -5,8 +5,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import monoids, scan_fold, tree_fold
-from repro.core.aggregation import allreduce_wire_bytes, grad_accum_fold, tree_bytes
+from repro.core import execute_fold, monoids, plan_fold
+from repro.core.aggregation import allreduce_wire_bytes, tree_bytes
+from repro.kernels import ops as kops
 from repro.optim.compress import (compressed_bytes, init_error_state,
                                   int8_compress, topk_compress)
 from .common import row, time_fn
@@ -15,8 +16,8 @@ from .common import row, time_fn
 def bench_fold_strategies(n: int = 4096, d: int = 256):
     rng = np.random.default_rng(0)
     xs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
-    t = jax.jit(lambda x: tree_fold(monoids.sum_, x))
-    s = jax.jit(lambda x: scan_fold(monoids.sum_, x))
+    t = jax.jit(lambda x: execute_fold(monoids.sum_, x, layout="tree"))
+    s = jax.jit(lambda x: execute_fold(monoids.sum_, x, layout="scan"))
     row("fold/tree(log-depth)", time_fn(t, xs), f"depth={int(np.ceil(np.log2(n)))}")
     row("fold/scan(in-mapper)", time_fn(s, xs), f"depth={n};live_valsB={d*4}")
 
@@ -30,10 +31,48 @@ def bench_grad_accum(mb: int = 8, dim: int = 1 << 16):
         l, g = jax.value_and_grad(lambda q: jnp.mean(jnp.square(b @ q)))(p)
         return {"loss": l}, g
 
-    fn = jax.jit(lambda p, d: grad_accum_fold(lg, p, d))
+    fn = jax.jit(lambda p, d: execute_fold(
+        monoids.sum_, d, map_fn=lambda b: lg(p, b), layout="scan"))
     us = time_fn(fn, w, data)
     row("grad_accum/scan_fold", us,
         f"microbatches={mb};materialized_gradsB={dim*4}(1 copy, not {mb})")
+
+
+def bench_planner_tiers(n: int = 1 << 12, d: int = 64, s: int = 128):
+    """The planner's keyed-fold tiers vs the pre-refactor direct kernel call.
+
+    segment_fold/planner_kernel must stay within noise of
+    segment_fold/direct_pallas — the planner adds trace-time dispatch only.
+    """
+    rng = np.random.default_rng(3)
+    vals = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+
+    plan = plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=s,
+                     layout="kernel")
+    direct = lambda v, k: kops.segment_fold(v, k, s)
+    via_kernel = jax.jit(lambda v, k: execute_fold(
+        monoids.sum_, v, segment_ids=k, num_segments=s, layout="kernel"))
+    via_seg = jax.jit(lambda v, k: execute_fold(
+        monoids.sum_, v, segment_ids=k, num_segments=s, layout="segment"))
+    # guarded rows (CI --compare gate): extra iters to stabilize the median
+    # against interpret-mode jitter
+    guard = dict(warmup=3, iters=9)
+    row("segment_fold/direct_pallas", time_fn(direct, vals, segs, **guard),
+        f"n={n};keys={s}")
+    row("segment_fold/planner_kernel", time_fn(via_kernel, vals, segs, **guard),
+        f"plan={plan.describe()}")
+    row("segment_fold/planner_segment_ops",
+        time_fn(via_seg, vals, segs, **guard), f"tableB={plan.out_bytes}")
+
+    mean_direct = lambda v, k: kops.mean_by_key(v, k, s)
+    mean_planner = jax.jit(lambda v, k: jax.vmap(monoids.mean.extract)(
+        execute_fold(monoids.mean, (v, jnp.ones((n,), jnp.int32)),
+                     segment_ids=k, num_segments=s, layout="kernel")))
+    row("mean_by_key/direct_pallas", time_fn(mean_direct, vals, segs, **guard),
+        f"n={n};keys={s}")
+    row("mean_by_key/planner_kernel", time_fn(mean_planner, vals, segs, **guard),
+        "extract(sum/count) via planner")
 
 
 def bench_metric_monoid_fusion(n_stats: int = 6):
@@ -75,6 +114,7 @@ def bench_compression(dim: int = 1 << 20):
 
 def main():
     bench_fold_strategies()
+    bench_planner_tiers()
     bench_grad_accum()
     bench_metric_monoid_fusion()
     bench_hierarchical_allreduce_model()

@@ -1,6 +1,8 @@
 """The paper's central efficiency claim, measured: Algorithms 1 vs 3 vs 4 on
 mean-by-key — time per call, intermediate values materialized, shuffle bytes
-(MapReduce cost model) and XLA collective bytes (TPU cost model)."""
+(MapReduce cost model) and XLA collective bytes (TPU cost model).  All three
+strategies lower through the execution planner (core/plan.py); the byte
+columns are read off each strategy's plan."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,11 +19,13 @@ def bench_mean_by_key(n: int = 1 << 14, keys: int = 64, shards: int = 8):
     for strat in STRATEGIES:
         fn = jax.jit(lambda r, s=strat: job.run_local(r, strategy=s,
                                                       num_shards=shards))
-        us = time_fn(fn, records)
+        # guarded rows (CI --compare gate): extra iters to stabilize medians
+        us = time_fn(fn, records, warmup=3, iters=9)
         st = job.stats(records, strategy=strat, num_shards=shards)
         row(f"mean_by_key/{strat}", us,
             f"inter={st.intermediate_values};shuffleB={st.shuffle_bytes_mapreduce};"
-            f"xlaB={st.shuffle_bytes_xla};reduction={st.reduction_vs_naive():.1f}x")
+            f"xlaB={st.shuffle_bytes_xla};reduction={st.reduction_vs_naive():.1f}x;"
+            f"plan={st.plan}")
 
 
 def bench_word_count(n: int = 1 << 15, vocab: int = 1024, shards: int = 8):

@@ -6,7 +6,10 @@ Prints ``name,us_per_call,derived`` CSV rows. The roofline table (the per-
 
 ``--quick`` runs only the fast algorithm/aggregation/sketch sections (the
 CI bench-smoke job); ``--json PATH`` additionally writes every row to a
-``BENCH_*.json`` artifact so the perf trajectory accumulates per commit.
+``BENCH_*.json`` artifact so the perf trajectory accumulates per commit;
+``--compare OLD_JSON`` diffs the fresh run against a previous artifact and
+exits non-zero on a >20% throughput regression in the guarded hot rows
+(``segment_fold``/``mean_by_key`` — the planner's kernel tier).
 """
 import argparse
 import json
@@ -17,6 +20,27 @@ from . import (bench_aggregation, bench_kernels, bench_mapreduce,
                bench_sketches, bench_train)
 from . import common
 
+# rows guarded by --compare: the planner-lowered hot paths
+GUARDED_PREFIXES = ("segment_fold", "mean_by_key")
+REGRESSION_TOLERANCE = 1.20   # fail on >20% slower than the previous artifact
+
+
+def compare_rows(new_rows, old_rows, *, tolerance: float = REGRESSION_TOLERANCE):
+    """Return [(name, old_us, new_us), ...] for guarded rows that regressed."""
+    old = {r["name"]: float(r["us_per_call"]) for r in old_rows
+           if isinstance(r, dict) and "name" in r and "us_per_call" in r}
+    regressions = []
+    for r in new_rows:
+        name = r["name"]
+        if not any(name.startswith(p) for p in GUARDED_PREFIXES):
+            continue
+        if name not in old or old[name] <= 0:
+            continue
+        new_us = float(r["us_per_call"])
+        if new_us > old[name] * tolerance:
+            regressions.append((name, old[name], new_us))
+    return regressions
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -24,12 +48,15 @@ def main(argv=None) -> int:
                     help="fast sections only (CI bench-smoke)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to a BENCH_*.json artifact")
+    ap.add_argument("--compare", default=None, metavar="OLD_JSON",
+                    help="diff against a previous BENCH_*.json; exit 1 on "
+                         ">20%% regression in segment_fold/mean_by_key rows")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
     print("# -- Algorithms 1/3/4: mean-by-key & word count ------------------")
     bench_mapreduce.main()
-    print("# -- aggregation layer: folds, grad accum, metrics, compression --")
+    print("# -- aggregation layer: folds, planner tiers, grad accum, metrics --")
     bench_aggregation.main()
     print("# -- sketch monoids (paper section 3) ----------------------------")
     bench_sketches.main()
@@ -51,6 +78,25 @@ def main(argv=None) -> int:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"# wrote {args.json} ({len(common.ROWS)} rows)")
+
+    if args.compare:
+        try:
+            with open(args.compare) as f:
+                old = json.load(f)
+        except (OSError, ValueError):
+            print(f"# no usable previous artifact at {args.compare}; "
+                  "skipping diff")
+            return 0
+        old_rows = old.get("rows", []) if isinstance(old, dict) else []
+        regressions = compare_rows(common.ROWS, old_rows)
+        if regressions:
+            print("# PERF REGRESSION (>20% vs previous artifact):")
+            for name, old_us, new_us in regressions:
+                print(f"#   {name}: {old_us:.1f}us -> {new_us:.1f}us "
+                      f"({new_us / old_us:.2f}x)")
+            return 1
+        print(f"# perf diff vs {args.compare}: "
+              f"guarded rows within {REGRESSION_TOLERANCE:.2f}x tolerance")
     return 0
 
 

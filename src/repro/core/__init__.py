@@ -4,17 +4,23 @@ Public API:
   Monoid, check_laws, tree_fold, scan_fold           (monoid.py)
   the monoid zoo: sum_, mean, welford, attn_state,
     affine_scan, bloom_filter, count_min, hyperloglog (monoids.py)
-  local_fold, segment_fold, monoid_allreduce,
+  local_fold, monoid_allreduce,
     hierarchical_psum, grad_accum_fold               (aggregation.py)
+  execute_fold, plan_fold, Plan, segment_fold        (plan.py — the unified
+    execution planner: ONE lowering path to Pallas / segment-ops / mesh
+    collectives for every fold)
   MapReduceJob, average_by_key_job, ShuffleStats     (mapreduce.py)
 """
-from .monoid import (Monoid, MonoidTypeError, Pytree, check_laws,
-                     check_structure, fold_map, scan_fold, tree_fold)
+from .monoid import (KernelLowering, Monoid, MonoidTypeError, Pytree,
+                     check_laws, check_structure, fold_map,
+                     register_kernel_lowering, scan_fold, tree_fold)
 from . import monoids
 from .monoids import REGISTRY, product
 from .aggregation import (grad_accum_fold, hierarchical_psum, local_fold,
                           monoid_allreduce, monoid_hierarchical_allreduce,
-                          monoid_reduce_scatter, segment_fold, tree_bytes)
+                          monoid_reduce_scatter, tree_bytes)
+from .plan import (Plan, TierPlan, collective_algorithm, execute_fold,
+                   plan_fold, segment_fold)
 from .mapreduce import (MapReduceJob, ShuffleStats, STRATEGIES,
                         algorithm2_combiner, average_by_key_job,
                         cooccurrence_stripes_job, validate_combiner,

@@ -5,8 +5,9 @@ execution framework is free to re-bracket the reduction any way it likes:
 per-record, per-block, per-device, per-pod. This module is that freedom made
 executable on a TPU mesh:
 
-* :func:`local_fold` / :func:`segment_fold` — the combiner, run before any
-  collective touches the wire (Hadoop: "combiner"; here: on-device fold).
+* :func:`local_fold` — the combiner, run before any collective touches the
+  wire (Hadoop: "combiner"; here: on-device fold).  Keyed folds live in
+  :mod:`repro.core.plan` (`execute_fold`), the single lowering path.
 * :func:`monoid_allreduce` — a monoid combine across a mesh axis, lowering to
   the cheapest collective the monoid admits (psum/pmax/pmin for the
   elementwise monoids, the flash-decoding rescale trick for ``attn_state``,
@@ -23,7 +24,7 @@ Everything here is shard_map/jit friendly; nothing allocates outside XLA.
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,84 +47,6 @@ def local_fold(m: Monoid, xs: Pytree, *, axis: int = 0, strategy: str = "tree") 
     if strategy == "scan":
         return scan_fold(m, xs, axis=axis)
     raise ValueError(f"unknown strategy {strategy!r}")
-
-
-def _segment_fold_generic(m: Monoid, values: Pytree, segment_ids: jnp.ndarray,
-                          num_segments: int, init: Optional[Pytree]) -> Pytree:
-    """O(N) serial scan — works for ANY monoid (the associative array of Alg 4)."""
-    if init is None:
-        first = jax.tree_util.tree_map(lambda v: v[0], values)
-        one = m.identity_like(first)
-        init = jax.tree_util.tree_map(
-            lambda l: jnp.broadcast_to(l, (num_segments,) + l.shape), one)
-
-    def step(acc, kv):
-        k, v = kv
-        cur = jax.tree_util.tree_map(lambda a: a[k], acc)
-        new = m.combine(cur, v)
-        acc = jax.tree_util.tree_map(lambda a, n: a.at[k].set(n), acc, new)
-        return acc, None
-
-    acc, _ = jax.lax.scan(step, init, (segment_ids, values))
-    return acc
-
-
-def segment_fold(m: Monoid, values: Pytree, segment_ids: jnp.ndarray,
-                 num_segments: int, *, init: Optional[Pytree] = None,
-                 impl: str = "auto") -> Pytree:
-    """Key-grouped monoid fold: MapReduce 'reduce by key', shapes static.
-
-    values: pytree with leading axis N; segment_ids: (N,) int in [0, S).
-    Returns a pytree with leading axis ``num_segments``.
-
-    impl:
-      'auto'   — use an XLA segment primitive when the monoid admits one
-                 (sum/max/min/mean/count), else the generic serial scan.
-      'onehot' — sum-only: one-hot (S, N) x (N, V) matmul; this mirrors the
-                 MXU strategy of the Pallas ``segment_fold`` kernel.
-      'scan'   — force the generic path (any monoid).
-    """
-    name = m.name
-    if impl == "scan":
-        return _segment_fold_generic(m, values, segment_ids, num_segments, init)
-    if impl == "onehot":
-        if name not in ("sum", "mean", "count"):
-            raise ValueError("onehot impl is only meaningful for additive monoids")
-        def onehot_sum(v):
-            v2 = v.reshape((v.shape[0], -1)).astype(jnp.float32)
-            oh = jax.nn.one_hot(segment_ids, num_segments, dtype=jnp.float32, axis=0)
-            out = oh @ v2  # (S, V) on the MXU
-            return out.reshape((num_segments,) + v.shape[1:]).astype(v.dtype)
-        folded = jax.tree_util.tree_map(onehot_sum, values)
-        return _seg_add_init(m, folded, init)
-    if impl != "auto":
-        raise ValueError(f"unknown impl {impl!r}")
-
-    seg_ops = {
-        "sum": jax.ops.segment_sum,
-        "count": jax.ops.segment_sum,
-        "mean": jax.ops.segment_sum,   # applied leaf-wise to (sum, count)
-        "max": jax.ops.segment_max,
-        "min": jax.ops.segment_min,
-        "bitwise_or": jax.ops.segment_max,
-        "stripes": jax.ops.segment_sum,
-    }
-    op = seg_ops.get(name)
-    if op is None:
-        return _segment_fold_generic(m, values, segment_ids, num_segments, init)
-    folded = jax.tree_util.tree_map(
-        lambda v: op(v, segment_ids, num_segments=num_segments), values)
-    if name in ("max", "min"):
-        # segment_max/min return dtype-min/max for empty segments, which is
-        # exactly the monoid identity — nothing to fix.
-        pass
-    return _seg_add_init(m, folded, init)
-
-
-def _seg_add_init(m: Monoid, folded: Pytree, init: Optional[Pytree]) -> Pytree:
-    if init is None:
-        return folded
-    return jax.vmap(m.combine)(init, folded)
 
 
 # ---------------------------------------------------------------------------
@@ -265,28 +188,17 @@ def grad_accum_fold(loss_and_grad_fn: Callable[[Pytree, Pytree], Tuple[Pytree, P
 
     ``loss_and_grad_fn(params, microbatch) -> (metrics_monoid_value, grads)``.
     Both metrics and grads are folded with the Sum monoid in a lax.scan carry
-    — the paper's Algorithm 4 with the weight-vector monoid of §3.
+    — the paper's Algorithm 4 with the weight-vector monoid of §3 — via the
+    planner's in-mapper scan tier (:func:`repro.core.plan.execute_fold`).
 
     Returns (metrics_accum, grads_sum). Callers divide by the number of
     microbatches (an `extract`) if they want the mean.
     """
-    first_mb = jax.tree_util.tree_map(lambda x: x[0], microbatches)
-    metrics_shape, grads_shape = jax.eval_shape(
-        lambda p, b: loss_and_grad_fn(p, b), params, first_mb)
-    init = (
-        jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), metrics_shape),
-        jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), grads_shape),
-    )
+    from . import monoids          # local: monoids is a sibling, not a dep
+    from .plan import execute_fold
 
-    def step(acc, mb):
-        macc, gacc = acc
-        metrics, grads = loss_and_grad_fn(params, mb)
-        macc = jax.tree_util.tree_map(jnp.add, macc, metrics)
-        gacc = jax.tree_util.tree_map(jnp.add, gacc, grads)
-        return (macc, gacc), None
-
-    (metrics, grads), _ = jax.lax.scan(step, init, microbatches)
-    return metrics, grads
+    return execute_fold(monoids.sum_, microbatches, layout="scan",
+                        map_fn=lambda mb: loss_and_grad_fn(params, mb))
 
 
 # ---------------------------------------------------------------------------

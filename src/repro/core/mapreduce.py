@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from .monoid import Monoid, MonoidTypeError, Pytree, tree_fold
-from .aggregation import segment_fold, monoid_reduce_scatter, monoid_allreduce, tree_bytes
+from .aggregation import monoid_reduce_scatter
+from .plan import Plan, execute_fold, plan_fold
 
 STRATEGIES = ("naive", "combiner", "in_mapper")
 
@@ -62,6 +63,7 @@ class ShuffleStats:
     shuffle_values: int
     shuffle_bytes_mapreduce: int
     shuffle_bytes_xla: int
+    plan: str = ""               # the planner's tier chain (plan.describe())
 
     def reduction_vs_naive(self) -> float:
         naive = self.num_records * self.value_bytes
@@ -113,33 +115,25 @@ class MapReduceJob:
         return keys.astype(jnp.int32), raws
 
     def _local_table_combiner(self, records: Pytree) -> Pytree:
-        """Algorithm 3: materialize lifted pairs, then combiner-fold by key."""
+        """Algorithm 3: materialize lifted pairs, then combiner-fold by key.
+
+        The planner picks the tier (Pallas kernel / segment-ops / scan)."""
         keys, raws = self._map_records(records)
-        lifted = jax.vmap(self.monoid.lift)(raws)          # materialized
-        return segment_fold(self.monoid, lifted, keys, self.num_keys)
+        return execute_fold(self.monoid, raws, segment_ids=keys,
+                            num_segments=self.num_keys, lifted=False)
 
     def _local_table_in_mapper(self, records: Pytree) -> Pytree:
-        """Algorithm 4: fold each record straight into the per-key table."""
+        """Algorithm 4: fold each record straight into the per-key table —
+        the planner's scan tier with the lift fused into the scan step, so
+        lifted pairs are never materialized."""
         keys, raws = self._map_records(records)
-        one = self.monoid.identity_like(
-            jax.tree_util.tree_map(lambda x: x[0],
-                                   jax.vmap(self.monoid.lift)(
-                                       jax.tree_util.tree_map(lambda x: x[:1], raws))))
-        table0 = jax.tree_util.tree_map(
-            lambda l: jnp.broadcast_to(l, (self.num_keys,) + l.shape), one)
-
-        def step(table, kv):
-            k, raw = kv
-            v = self.monoid.lift(raw)
-            cur = jax.tree_util.tree_map(lambda t: t[k], table)
-            new = self.monoid.combine(cur, v)
-            return jax.tree_util.tree_map(lambda t, n: t.at[k].set(n), table, new), None
-
-        table, _ = jax.lax.scan(step, table0, (keys, raws))
-        return table
+        return execute_fold(self.monoid, raws, segment_ids=keys,
+                            num_segments=self.num_keys, layout="scan",
+                            lifted=False)
 
     def _fold_pairs_into_table(self, keys: jnp.ndarray, lifted: Pytree) -> Pytree:
-        return segment_fold(self.monoid, lifted, keys, self.num_keys)
+        return execute_fold(self.monoid, lifted, segment_ids=keys,
+                            num_segments=self.num_keys)
 
     # -- single-host reference execution ---------------------------------------
     def run_local(self, records: Pytree, *, strategy: str = "in_mapper",
@@ -213,7 +207,11 @@ class MapReduceJob:
                         shard)
                     table = shard_leaves
                 else:
-                    table = monoid_allreduce(self.monoid, table, axis_name)
+                    # planner collective tier: ICI-first-then-DCN allreduce
+                    table = execute_fold(
+                        self.monoid,
+                        jax.tree_util.tree_map(lambda v: v[None], table),
+                        mesh_axes=(axis_name,))
             return table
 
         in_specs = (jax.tree_util.tree_map(lambda _: spec, records),)
@@ -229,42 +227,55 @@ class MapReduceJob:
         return jax.vmap(self.monoid.extract)(table)
 
     # -- accounting --------------------------------------------------------------
-    def stats(self, records: Pytree, *, strategy: str, num_shards: int) -> ShuffleStats:
-        """The paper's cost model for this job on ``num_shards`` mappers."""
+    def plan(self, records: Pytree, *, strategy: str,
+             num_shards: int) -> Plan:
+        """The execution plan for this job's per-shard fold + shuffle.
+
+        The plan is built from ShapeDtypeStructs (no FLOPs): one shard's
+        lifted pairs, keyed by ``num_keys``, combined across a ``shard``
+        axis of size ``num_shards``.  strategy='naive' models Algorithm 1
+        (``pre_combine=False``: raw pairs cross the wire un-combined);
+        'combiner'/'in_mapper' differ only in the local tier.
+        """
+        if strategy not in STRATEGIES:
+            raise ValueError(f"strategy must be one of {STRATEGIES}")
         n = jax.tree_util.tree_leaves(records)[0].shape[0]
+        local_n = max(1, n // num_shards)
         one_rec = jax.tree_util.tree_map(lambda x: x[0], records)
         _, raw_shape = jax.eval_shape(self.mapper, one_rec)
         value_shape = jax.eval_shape(self.monoid.lift, raw_shape)
-        vbytes = tree_bytes(value_shape)
+        pairs = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((local_n,) + s.shape, s.dtype),
+            value_shape)
+        seg = jax.ShapeDtypeStruct((local_n,), jnp.int32)
+        return plan_fold(
+            self.monoid, pairs, segment_ids=seg, num_segments=self.num_keys,
+            mesh_axes=("shard",), axis_sizes={"shard": num_shards},
+            layout="scan" if strategy == "in_mapper" else "auto",
+            pre_combine=strategy != "naive")
+
+    def stats(self, records: Pytree, *, strategy: str, num_shards: int) -> ShuffleStats:
+        """The paper's cost model for this job on ``num_shards`` mappers —
+        every byte figure is read off the execution plan."""
+        n = jax.tree_util.tree_leaves(records)[0].shape[0]
+        plan = self.plan(records, strategy=strategy, num_shards=num_shards)
+        vbytes = plan.value_bytes
         table_values = self.num_keys * num_shards
 
         if strategy == "naive":
             inter, shuffled = n, n
-            # all_gather of all pairs: each device's n/P pairs replicated P-1 times
-            xla = int(n * vbytes * (num_shards - 1) / max(num_shards, 1)) * num_shards \
-                if num_shards > 1 else 0
         elif strategy == "combiner":
             inter, shuffled = n + table_values, table_values
-            xla = _ring_reduce_bytes(self.num_keys * vbytes, num_shards)
-        elif strategy == "in_mapper":
+        else:  # in_mapper: only the table is ever live
             inter, shuffled = table_values, table_values
-            xla = _ring_reduce_bytes(self.num_keys * vbytes, num_shards)
-        else:
-            raise ValueError(strategy)
         return ShuffleStats(
             strategy=strategy, num_records=n, num_keys=self.num_keys,
             value_bytes=vbytes, intermediate_values=inter,
             shuffle_values=shuffled,
             shuffle_bytes_mapreduce=shuffled * vbytes,
-            shuffle_bytes_xla=xla,
+            shuffle_bytes_xla=plan.collective_wire_bytes,
+            plan=plan.describe(),
         )
-
-
-def _ring_reduce_bytes(nbytes: int, P: int) -> int:
-    """Total wire bytes of a ring reduce-scatter + all-gather over P devices."""
-    if P <= 1:
-        return 0
-    return int(2 * nbytes * (P - 1))
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,7 @@ we enforce it with :func:`check_structure`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +32,37 @@ def _default_lift(x: Pytree) -> Pytree:
 
 def _default_extract(m: Pytree) -> Pytree:
     return m
+
+
+# ---------------------------------------------------------------------------
+# kernel lowerings — how the execution planner (core/plan.py) finds a Pallas
+# kernel for a monoid
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelLowering:
+    """A registered accelerator lowering for a monoid's keyed fold.
+
+    semiring: which semiring the kernel's one-hot matmul/reduce runs in
+      ('sum' for additive monoids, 'max'/'min' for the max-plus family).
+    fn: ``(values, seg_ids, num_segments, *, block_n, interpret) -> table`` —
+      applied leaf-wise to the lifted value pytree; returns the per-key table
+      with leading axis ``num_segments``.
+    """
+
+    semiring: str
+    fn: Callable[..., Pytree]
+
+
+# Keyed by Monoid.name. Monoids are frozen/static, so the registry is the
+# mutable side-table that lets kernels/ register lowerings without core
+# importing kernels at module load.
+_KERNEL_LOWERINGS: Dict[str, KernelLowering] = {}
+
+
+def register_kernel_lowering(name: str, lowering: KernelLowering) -> None:
+    """Register (or replace) the accelerator lowering for monoid ``name``."""
+    _KERNEL_LOWERINGS[name] = lowering
 
 
 @jax.tree_util.register_static
@@ -72,6 +103,14 @@ class Monoid:
             return self.identity_fn(example=example)
         except TypeError:
             return self.identity_fn()
+
+    def kernel_lowering(self) -> Optional[KernelLowering]:
+        """The registered Pallas lowering for this monoid, or None.
+
+        The execution planner (:mod:`repro.core.plan`) consults this to decide
+        whether the kernel tier is available for a keyed fold.
+        """
+        return _KERNEL_LOWERINGS.get(self.name)
 
     # -- algebra --------------------------------------------------------------
     def __call__(self, a: Pytree, b: Pytree) -> Pytree:

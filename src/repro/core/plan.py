@@ -1,0 +1,526 @@
+"""The unified monoid execution planner — ONE lowering path for every fold.
+
+The paper's point is that once an intermediate value is a monoid, the
+*framework* — not the caller — may re-bracket and relocate the reduction
+(combiner, in-mapper combining, hierarchical aggregation).  This module is
+that freedom given a single entry point: :func:`execute_fold` lowers any
+fold — flat or keyed, local or cross-mesh — to a tiered plan:
+
+  tier 1  kernel      a registered Pallas lowering (kernels/segment_fold.py's
+                      semiring kernel) when the monoid has one,
+  tier 2  segment-ops ``jax.ops.segment_*`` for the monoids XLA reduces
+                      natively, or the generic serial scan / tree fold that
+                      works for ANY monoid,
+  tier 3  collective  hierarchical ICI-first-then-DCN mesh combine via
+                      ``dist/collectives.py`` (the rack-aware combiner tree).
+
+:func:`plan_fold` is the pure cost model behind it: it reports the chosen
+tier per stage and the predicted shuffle/collective bytes, so
+``mapreduce.ShuffleStats`` is derived from the plan rather than ad-hoc
+accounting.  Planning works on concrete arrays or ShapeDtypeStructs alike.
+
+Kernel lowerings are registered on :class:`~repro.core.monoid.Monoid` by
+name (see ``register_kernel_lowering``); the additive and max-plus zoo
+monoids get leaf-wise semiring lowerings below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .monoid import (KernelLowering, Monoid, Pytree, register_kernel_lowering,
+                     scan_fold, tree_fold)
+from .aggregation import _PMAX_LIKE, _PMIN_LIKE, _PSUM_LIKE, tree_bytes
+
+LAYOUTS = ("auto", "kernel", "segment", "scan", "tree")
+
+# monoids XLA reduces natively with a segment primitive (tier 2, fast path)
+_SEGMENT_OPS: Mapping[str, Callable] = {
+    "sum": jax.ops.segment_sum,
+    "count": jax.ops.segment_sum,
+    "mean": jax.ops.segment_sum,   # applied leaf-wise to (sum, count)
+    "stripes": jax.ops.segment_sum,
+    "max": jax.ops.segment_max,
+    "min": jax.ops.segment_min,
+    "bitwise_or": jax.ops.segment_max,   # 0/1 bitmaps: OR == max
+}
+
+
+# ---------------------------------------------------------------------------
+# kernel lowerings for the zoo — leaf-wise semiring application
+# ---------------------------------------------------------------------------
+
+def _semiring_lowering(semiring: str) -> KernelLowering:
+    """Leaf-wise lowering onto the semiring-parameterized Pallas kernel.
+
+    Each leaf (N, ...) is flattened to (N, D), folded by key on the MXU/VPU,
+    and reshaped to (num_segments, ...).  Exact integer leaves round-trip to
+    their dtype (kernels/segment_fold.py handles the cast-back).
+    """
+
+    def lower(values: Pytree, seg_ids: jnp.ndarray, num_segments: int, *,
+              block_n: int = 512, interpret: Optional[bool] = None) -> Pytree:
+        from ..kernels.segment_fold import segment_fold_pallas
+
+        def per_leaf(v):
+            v = jnp.asarray(v)
+            flat = v.reshape((v.shape[0], -1))
+            out = segment_fold_pallas(flat, seg_ids, num_segments,
+                                      semiring=semiring, block_n=block_n,
+                                      interpret=interpret)
+            return out.reshape((num_segments,) + v.shape[1:])
+
+        return jax.tree_util.tree_map(per_leaf, values)
+
+    return KernelLowering(semiring=semiring, fn=lower)
+
+
+def _mean_pair_lowering() -> KernelLowering:
+    """Fused lowering for mean's (sum, count) pair: the count column rides
+    the same one-hot matmul as the sums (ONE kernel launch, the paper's
+    running example), falling back to leaf-wise for pytree-valued sums."""
+    leafwise = _semiring_lowering("sum").fn
+
+    def lower(values: Pytree, seg_ids: jnp.ndarray, num_segments: int, *,
+              block_n: int = 512, interpret: Optional[bool] = None) -> Pytree:
+        from ..kernels.segment_fold import segment_fold_pallas
+
+        s, c = values
+        s_leaves = jax.tree_util.tree_leaves(s)
+        if len(s_leaves) != 1 or jnp.ndim(c) != 1:
+            return leafwise(values, seg_ids, num_segments, block_n=block_n,
+                            interpret=interpret)
+        (sv,) = s_leaves
+        sv = jnp.asarray(sv)
+        flat = jnp.concatenate(
+            [sv.reshape((sv.shape[0], -1)).astype(jnp.float32),
+             jnp.asarray(c).reshape((-1, 1)).astype(jnp.float32)], axis=1)
+        out = segment_fold_pallas(flat, seg_ids, num_segments,
+                                  semiring="sum", block_n=block_n,
+                                  interpret=interpret)
+        sums = out[:, :-1].reshape((num_segments,) + sv.shape[1:])
+        if jnp.issubdtype(sv.dtype, jnp.integer):
+            sums = sums.astype(sv.dtype)
+        counts = out[:, -1]
+        if jnp.issubdtype(jnp.asarray(c).dtype, jnp.integer):
+            counts = counts.astype(jnp.asarray(c).dtype)
+        treedef = jax.tree_util.tree_structure(s)
+        return (jax.tree_util.tree_unflatten(treedef, [sums]), counts)
+
+    return KernelLowering(semiring="sum", fn=lower)
+
+
+# The additive family rides the MXU one-hot matmul; the max-plus family the
+# VPU masked reduce.  bitwise_or qualifies because the sketch monoids keep
+# 0/1 uint8 bitmaps, where OR == max (see aggregation.monoid_allreduce).
+for _name in ("sum", "count", "stripes"):
+    register_kernel_lowering(_name, _semiring_lowering("sum"))
+register_kernel_lowering("mean", _mean_pair_lowering())
+register_kernel_lowering("max", _semiring_lowering("max"))
+register_kernel_lowering("bitwise_or", _semiring_lowering("max"))
+register_kernel_lowering("min", _semiring_lowering("min"))
+
+
+# ---------------------------------------------------------------------------
+# the plan — tiers + predicted bytes
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TierPlan:
+    """One stage of a lowered fold.
+
+    kind: 'kernel' | 'segment_ops' | 'scan' | 'tree' | 'gather_pairs' |
+          'allreduce'.
+    wire_bytes: predicted bytes this stage puts on the wire, summed over the
+      participants of one reduction group (0 for on-device stages).
+    """
+
+    kind: str
+    detail: str
+    out_bytes: int
+    wire_bytes: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A lowered fold: local tier(s) followed by collective tier(s)."""
+
+    monoid: Monoid
+    tiers: Tuple[TierPlan, ...]
+    num_records: int
+    num_segments: Optional[int]
+    value_bytes: int          # bytes of ONE lifted monoid value
+    out_bytes: int            # bytes of the final local result (table/value)
+
+    @property
+    def local_tier(self) -> TierPlan:
+        return next(t for t in self.tiers
+                    if t.kind not in ("gather_pairs", "allreduce"))
+
+    @property
+    def collective_wire_bytes(self) -> int:
+        return sum(t.wire_bytes for t in self.tiers)
+
+    def describe(self) -> str:
+        return " -> ".join(f"{t.kind}[{t.detail}]" for t in self.tiers)
+
+
+def collective_algorithm(m: Monoid) -> str:
+    """'ring' when the monoid lowers to a psum/pmax/pmin-family collective
+    (see aggregation.monoid_allreduce), 'gather' for the generic fallback."""
+    name = m.name
+    if (name in _PSUM_LIKE or name in _PMAX_LIKE or name in _PMIN_LIKE
+            or name in ("mean", "logsumexp", "attn_state")
+            or name.startswith("hll") or name.startswith("cms")):
+        return "ring"
+    return "gather"
+
+
+def collective_wire_bytes(nbytes: int, axis_size: int, algorithm: str) -> int:
+    """Total wire bytes across one reduction group of ``axis_size`` devices."""
+    if axis_size <= 1:
+        return 0
+    if algorithm == "ring":       # reduce-scatter + all-gather
+        return int(2 * nbytes * (axis_size - 1))
+    if algorithm == "gather":     # every device replicates its value P-1 times
+        return int(nbytes * (axis_size - 1) * axis_size)
+    raise ValueError(algorithm)
+
+
+def _split_ici_dcn(mesh_axes: Sequence[Any]) -> Tuple[Tuple, Tuple]:
+    # delegate to dist: planning order must match execution order exactly
+    from ..dist.collectives import split_axis_names
+    return split_axis_names(mesh_axes)
+
+
+def _leading_dim(values: Pytree) -> int:
+    return jax.tree_util.tree_leaves(values)[0].shape[0]
+
+
+def _one_slice(values: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda v: jax.ShapeDtypeStruct(v.shape[1:], v.dtype), values)
+
+
+def _lifted_value_shape(m: Monoid, values: Pytree, lifted: bool,
+                        map_fn: Optional[Callable]) -> Pytree:
+    """Shape/dtype pytree of ONE lifted monoid value (no FLOPs spent)."""
+    one = _one_slice(values)
+    if map_fn is not None:
+        return jax.eval_shape(lambda x: m.lift(map_fn(x)), one)
+    if not lifted:
+        return jax.eval_shape(m.lift, one)
+    return one
+
+
+def _kernel_compatible(m: Monoid, value_shape: Pytree) -> bool:
+    if m.kernel_lowering() is None:
+        return False
+    for leaf in jax.tree_util.tree_leaves(value_shape):
+        if not (jnp.issubdtype(leaf.dtype, jnp.floating)
+                or jnp.issubdtype(leaf.dtype, jnp.integer)):
+            return False
+    return True
+
+
+def _kernel_exact(value_shape: Pytree, num_records: int) -> bool:
+    """Whether the kernel's float32 accumulator is exact for these inputs.
+
+    Integer leaves are accumulated in float32; that is exact only while the
+    per-key running total stays below 2**24.  We cannot see magnitudes at
+    plan time, so ``layout='auto'`` only keeps integer inputs on the kernel
+    tier when even the worst case (every record at the dtype's extreme, all
+    landing in one key) fits — narrow dtypes (8/16-bit bitmaps and counts)
+    pass for reasonable batches; 32-bit-and-wider integers always down-tier
+    to the exact segment-ops path.  Forcing ``layout='kernel'`` bypasses
+    this — the caller asserts their magnitudes fit.
+    """
+    for leaf in jax.tree_util.tree_leaves(value_shape):
+        if jnp.issubdtype(leaf.dtype, jnp.integer):
+            worst = abs(int(jnp.iinfo(leaf.dtype).min)) * max(num_records, 1)
+            if worst >= 2 ** 24:
+                return False
+    return True
+
+
+def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
+              num_segments: Optional[int] = None,
+              mesh_axes: Optional[Sequence[Any]] = None,
+              layout: str = "auto", lifted: bool = True,
+              map_fn: Optional[Callable] = None,
+              mesh: Optional[jax.sharding.Mesh] = None,
+              axis_sizes: Optional[Mapping[Any, int]] = None,
+              pre_combine: bool = True, block_n: int = 512) -> Plan:
+    """Lower a fold to a tiered :class:`Plan` without executing it.
+
+    ``values`` may be concrete arrays or ShapeDtypeStructs — planning costs
+    no FLOPs.  ``pre_combine=False`` models the paper's Algorithm 1 (no
+    combiner: raw pairs cross the wire, receivers fold) purely for byte
+    accounting; :func:`execute_fold` refuses to run such plans.
+
+    Axis sizes for collective byte prediction come from ``mesh`` or
+    ``axis_sizes``; unknown sizes predict 0 wire bytes.
+    """
+    if layout not in LAYOUTS:
+        raise ValueError(f"layout must be one of {LAYOUTS}")
+    keyed = segment_ids is not None
+    if keyed and num_segments is None:
+        raise ValueError("keyed folds require num_segments")
+
+    n = _leading_dim(values)
+    value_shape = _lifted_value_shape(m, values, lifted, map_fn)
+    vbytes = tree_bytes(value_shape)
+    out_bytes = (num_segments * vbytes) if keyed else vbytes
+
+    # -- local tier ---------------------------------------------------------
+    if keyed:
+        if layout == "tree":
+            raise ValueError("layout='tree' is a flat-fold layout; keyed "
+                             "folds use kernel/segment/scan")
+        kind = layout
+        if layout == "auto":
+            if (_kernel_compatible(m, value_shape)
+                    and _kernel_exact(value_shape, n)
+                    and jax.default_backend() == "tpu"):
+                kind = "kernel"
+            elif m.name in _SEGMENT_OPS:
+                kind = "segment"
+            else:
+                kind = "scan"
+        if kind == "kernel":
+            if not _kernel_compatible(m, value_shape):
+                raise ValueError(
+                    f"monoid {m.name!r} has no compatible kernel lowering")
+            low = m.kernel_lowering()
+            local = TierPlan("kernel",
+                             f"pallas segment_fold[{low.semiring}] "
+                             f"block_n={block_n}", out_bytes)
+        elif kind == "segment":
+            op = _SEGMENT_OPS.get(m.name)
+            if op is None:
+                raise ValueError(
+                    f"monoid {m.name!r} has no XLA segment primitive")
+            local = TierPlan("segment_ops", f"jax.ops.{op.__name__}",
+                             out_bytes)
+        else:
+            local = TierPlan("scan", "serial scan (any monoid, Alg 4)",
+                             out_bytes)
+    else:
+        kind = layout
+        if layout in ("kernel", "segment"):
+            raise ValueError(f"layout={layout!r} requires segment_ids")
+        if layout == "auto":
+            kind = "scan" if map_fn is not None else "tree"
+        if kind == "tree":
+            local = TierPlan("tree", "log-depth tree fold (Alg 3 combiner)",
+                             out_bytes)
+        else:
+            local = TierPlan("scan", "in-mapper scan (Alg 4, O(1) live)",
+                             out_bytes)
+
+    # -- collective tiers: ICI first, then DCN ------------------------------
+    sizes = dict(axis_sizes or {})
+    if mesh is not None:
+        for ax, sz in mesh.shape.items():
+            sizes.setdefault(ax, sz)
+    algo = collective_algorithm(m)
+    tiers = []
+    if not pre_combine:
+        # Algorithm 1: every lifted pair crosses the wire un-combined.
+        pair_bytes = n * vbytes
+        wire = sum(collective_wire_bytes(pair_bytes, sizes.get(ax, 1),
+                                         "gather") for ax in (mesh_axes or ()))
+        tiers.append(TierPlan("gather_pairs",
+                              "no combiner: all pairs shuffled (Alg 1)",
+                              pair_bytes, wire))
+        tiers.append(local)
+    else:
+        tiers.append(local)
+        if mesh_axes:
+            ici, dcn = _split_ici_dcn(mesh_axes)
+            for group, label in ((ici, "ici"), (dcn, "dcn")):
+                for ax in group:
+                    P = sizes.get(ax)
+                    wire = collective_wire_bytes(out_bytes, P, algo) if P else 0
+                    tiers.append(TierPlan(
+                        "allreduce",
+                        f"{label}:{ax} {algo}"
+                        + ("" if P else " (size unknown)"),
+                        out_bytes, wire))
+    return Plan(monoid=m, tiers=tuple(tiers), num_records=n,
+                num_segments=num_segments, value_bytes=vbytes,
+                out_bytes=out_bytes)
+
+
+# ---------------------------------------------------------------------------
+# tier implementations
+# ---------------------------------------------------------------------------
+
+def _seg_add_init(m: Monoid, folded: Pytree, init: Optional[Pytree]) -> Pytree:
+    if init is None:
+        return folded
+    return jax.vmap(m.combine)(init, folded)
+
+
+def _segment_fold_generic(m: Monoid, values: Pytree, segment_ids: jnp.ndarray,
+                          num_segments: int, init: Optional[Pytree] = None, *,
+                          lifted: bool = True,
+                          map_fn: Optional[Callable] = None) -> Pytree:
+    """O(N) serial scan — works for ANY monoid (the associative array of
+    Alg 4).  With ``lifted=False``/``map_fn`` the lift runs inside the scan
+    step, so per-record values are never materialized (true in-mapper
+    combining)."""
+    def prep(x):
+        if map_fn is not None:
+            return m.lift(map_fn(x))
+        return x if lifted else m.lift(x)
+
+    if init is None:
+        first = jax.tree_util.tree_map(lambda v: v[0], values)
+        one = m.identity_like(prep(first))
+        init = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (num_segments,) + l.shape), one)
+
+    def step(acc, kv):
+        k, x = kv
+        v = prep(x)
+        cur = jax.tree_util.tree_map(lambda a: a[k], acc)
+        new = m.combine(cur, v)
+        acc = jax.tree_util.tree_map(lambda a, n_: a.at[k].set(n_), acc, new)
+        return acc, None
+
+    acc, _ = jax.lax.scan(step, init, (segment_ids, values))
+    return acc
+
+
+def _materialize_lifted(m: Monoid, values: Pytree, lifted: bool,
+                        map_fn: Optional[Callable]) -> Pytree:
+    if map_fn is not None:
+        return jax.vmap(lambda x: m.lift(map_fn(x)))(values)
+    if not lifted:
+        return jax.vmap(m.lift)(values)
+    return values
+
+
+def _scan_fold_map(m: Monoid, values: Pytree, map_fn: Callable,
+                   axis: int) -> Pytree:
+    """Flat in-mapper fold: lift(map_fn(x)) folded in a lax.scan carry."""
+    def move(x):
+        return jnp.moveaxis(x, axis, 0) if axis != 0 else x
+
+    values = jax.tree_util.tree_map(move, values)
+    one = _one_slice(values)
+    out_shape = jax.eval_shape(lambda x: m.lift(map_fn(x)), one)
+    init = m.identity_like(out_shape)
+
+    def step(acc, x):
+        return m.combine(acc, m.lift(map_fn(x))), None
+
+    acc, _ = jax.lax.scan(step, init, values)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# the single entry point
+# ---------------------------------------------------------------------------
+
+def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
+                 num_segments: Optional[int] = None,
+                 mesh_axes: Optional[Sequence[Any]] = None,
+                 layout: str = "auto", lifted: bool = True,
+                 map_fn: Optional[Callable] = None,
+                 init: Optional[Pytree] = None, axis: int = 0,
+                 block_n: int = 512, interpret: Optional[bool] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 axis_sizes: Optional[Mapping[Any, int]] = None,
+                 with_plan: bool = False) -> Pytree:
+    """Fold monoid values through the planner-chosen tiers.
+
+    values: pytree with leading (or ``axis``) batch dim.  With
+    ``segment_ids`` (and ``num_segments``) the fold is keyed — a MapReduce
+    'reduce by key' returning a (num_segments, ...) table.  With
+    ``mesh_axes`` the local result is additionally combined across the named
+    mesh axes (must run inside shard_map), fast ICI axes before the slow DCN
+    ``pod`` axis.
+
+    layout: 'auto' picks the kernel tier on TPU when the monoid has a
+    registered Pallas lowering, else segment-ops, else the generic scan;
+    'kernel' / 'segment' / 'scan' / 'tree' force a tier.  ``map_fn`` maps
+    raw inputs (then ``m.lift``) without materializing them on scan tiers —
+    the in-mapper combining of Algorithm 4.  ``lifted=False`` applies
+    ``m.lift`` to each element first.
+
+    Returns the folded value — or ``(value, plan)`` with ``with_plan=True``.
+    """
+    plan = plan_fold(m, values, segment_ids=segment_ids,
+                     num_segments=num_segments, mesh_axes=mesh_axes,
+                     layout=layout, lifted=lifted, map_fn=map_fn, mesh=mesh,
+                     axis_sizes=axis_sizes, block_n=block_n)
+    kind = plan.local_tier.kind
+    keyed = segment_ids is not None
+
+    if keyed:
+        if axis != 0:
+            raise ValueError("keyed folds require the batch axis at 0")
+        if kind == "kernel":
+            mat = _materialize_lifted(m, values, lifted, map_fn)
+            folded = m.kernel_lowering().fn(mat, segment_ids, num_segments,
+                                            block_n=block_n,
+                                            interpret=interpret)
+            out = _seg_add_init(m, folded, init)
+        elif kind == "segment_ops":
+            mat = _materialize_lifted(m, values, lifted, map_fn)
+            op = _SEGMENT_OPS[m.name]
+            folded = jax.tree_util.tree_map(
+                lambda v: op(v, segment_ids, num_segments=num_segments), mat)
+            out = _seg_add_init(m, folded, init)
+        else:
+            out = _segment_fold_generic(m, values, segment_ids, num_segments,
+                                        init, lifted=lifted, map_fn=map_fn)
+    else:
+        if init is not None:
+            raise ValueError("init is only supported for keyed folds")
+        if kind == "tree":
+            mat = _materialize_lifted(m, values, lifted, map_fn)
+            out = tree_fold(m, mat, axis=axis)
+        elif map_fn is not None:
+            out = _scan_fold_map(m, values, map_fn, axis)
+        else:
+            mat = _materialize_lifted(m, values, lifted, map_fn)
+            out = scan_fold(m, mat, axis=axis)
+
+    if mesh_axes:
+        from ..dist.collectives import cross_axes_allreduce
+        out = cross_axes_allreduce(m, out, mesh_axes)
+    return (out, plan) if with_plan else out
+
+
+# ---------------------------------------------------------------------------
+# keyed-fold compatibility wrapper (the pre-planner public API)
+# ---------------------------------------------------------------------------
+
+def segment_fold(m: Monoid, values: Pytree, segment_ids: jnp.ndarray,
+                 num_segments: int, *, init: Optional[Pytree] = None,
+                 impl: str = "auto") -> Pytree:
+    """Key-grouped monoid fold: MapReduce 'reduce by key', shapes static.
+
+    Thin wrapper over :func:`execute_fold` kept for callers that predate the
+    planner.  impl: 'auto' — segment primitive when the monoid admits one,
+    else the generic scan; 'onehot' — force the one-hot matmul kernel tier
+    (additive monoids only); 'scan' — force the generic path.
+    """
+    if impl == "onehot":
+        if m.name not in ("sum", "mean", "count", "stripes"):
+            raise ValueError("onehot impl is only meaningful for additive monoids")
+        layout = "kernel"
+    elif impl == "scan":
+        layout = "scan"
+    elif impl == "auto":
+        layout = "segment" if m.name in _SEGMENT_OPS else "scan"
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return execute_fold(m, values, segment_ids=segment_ids,
+                        num_segments=num_segments, init=init, layout=layout)

@@ -1,3 +1,4 @@
 """repro.data — deterministic resumable pipeline + monoid stream statistics."""
 from .pipeline import DataConfig, Prefetcher, SyntheticCorpus
-from .stats import init_stats, make_stream_stats, summarize, update_stats
+from .stats import (init_stats, make_stream_stats, summarize, sync_stats,
+                    update_stats)

@@ -6,20 +6,22 @@ One accumulator tracks, over the token stream:
   * ``bloom`` — Bloom filter of seen ids (membership),
   * ``count`` — exact token count,
 
-combined per batch with in-mapper combining (Algorithm 4: one fold per batch,
-state carried across batches), and across hosts with ONE collective over the
-product monoid. This is the Summingbird observation (paper §4): the same
-monoid serves the streaming pipeline and any batch job.
+combined per batch with in-mapper combining (Algorithm 4: the whole batch is
+vector-lifted into ONE monoid value, then folded into the carried state by
+the execution planner), and across hosts with ONE collective over the
+product monoid (:func:`sync_stats`).  This is the Summingbird observation
+(paper §4): the same monoid serves the streaming pipeline and any batch job.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from ..core import monoids
 from ..core.monoid import Monoid
+from ..core.plan import execute_fold
 
 
 def make_stream_stats(*, cms_depth: int = 4, cms_width: int = 2048,
@@ -37,24 +39,59 @@ def init_stats(m: Monoid) -> Dict[str, Any]:
     return m.identity()
 
 
+# Structural combine for any stream-stats state: parameter-free (widths come
+# from the state's shapes), so the jit'd fold needs no Monoid argument.
+_STATS_COMBINE = Monoid(
+    name="stream_stats",
+    combine=lambda a, b: {
+        "cms": a["cms"] + b["cms"],
+        "hll": jnp.maximum(a["hll"], b["hll"]),
+        "bloom": jnp.bitwise_or(a["bloom"], b["bloom"]),
+        "count": a["count"] + b["count"],
+    },
+    identity_fn=lambda *, example: jax.tree_util.tree_map(
+        jnp.zeros_like, example),
+)
+
+
+def _batch_value(state: Dict[str, Any], tokens: jnp.ndarray) -> Dict[str, Any]:
+    """Vector-lift a whole token batch into ONE stats monoid value.
+
+    This is the mapper side done in bulk: shapes are taken from ``state`` so
+    the value matches whatever widths ``make_stream_stats`` chose.
+    """
+    flat = tokens.reshape(-1)
+    cms = monoids.cms_update_batch(jnp.zeros_like(state["cms"]), flat)
+    hll = monoids.hll_update_batch(jnp.zeros_like(state["hll"]), flat)
+    bloom = jnp.zeros_like(state["bloom"])
+    for s in range(4):
+        idx = monoids._uhash(flat, s) % bloom.shape[-1]
+        bloom = bloom.at[idx].set(1)
+    count = jnp.asarray(flat.shape[0], state["count"].dtype)
+    return {"cms": cms, "hll": hll, "bloom": bloom, "count": count}
+
+
 @jax.jit
 def _fold_tokens(state, tokens):
-    """In-mapper combine of one token batch into the stats state."""
-    flat = tokens.reshape(-1)
-    cms = monoids.cms_update_batch(state["cms"], flat)
-    hll = monoids.hll_update_batch(state["hll"], flat)
-    # bloom: batch OR of per-hash one-hots
-    nb = state["bloom"].shape[-1]
-    bloom = state["bloom"]
-    for s in range(4):
-        idx = monoids._uhash(flat, s) % nb
-        bloom = bloom.at[idx].set(1)
-    count = state["count"] + flat.shape[0]
-    return {"cms": cms, "hll": hll, "bloom": bloom, "count": count}
+    """In-mapper combine of one token batch into the stats state, lowered
+    through the execution planner (tree fold over [state, batch_value])."""
+    bval = _batch_value(state, tokens)
+    stacked = jax.tree_util.tree_map(lambda a, b: jnp.stack([a, b]),
+                                     state, bval)
+    return execute_fold(_STATS_COMBINE, stacked)
 
 
 def update_stats(state: Dict[str, Any], tokens: jnp.ndarray) -> Dict[str, Any]:
     return _fold_tokens(state, tokens)
+
+
+def sync_stats(m: Monoid, state: Dict[str, Any],
+               mesh_axes: Sequence[Any]) -> Dict[str, Any]:
+    """Combine per-host stats across mesh axes (inside shard_map) — ONE
+    collective for the whole product monoid, ICI first then DCN."""
+    return execute_fold(
+        m, jax.tree_util.tree_map(lambda v: v[None], state),
+        mesh_axes=mesh_axes)
 
 
 def summarize(m: Monoid, state: Dict[str, Any]) -> Dict[str, Any]:

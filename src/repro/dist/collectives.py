@@ -27,16 +27,27 @@ from ..core import monoids
 DCN_AXIS_NAMES: Tuple[str, ...] = ("pod",)
 
 
+def split_axis_names(axes: Sequence[Any]) -> Tuple[Tuple[Any, ...], Tuple[Any, ...]]:
+    """Classify axis names into (ici, dcn) — THE single definition of the
+    fast/slow split, shared by these collectives and the execution planner
+    (``core/plan.py``), so predicted tier ordering can never diverge from
+    the executed one."""
+    names = tuple(axes)
+    ici = tuple(a for a in names if a not in DCN_AXIS_NAMES)
+    dcn = tuple(a for a in names if a in DCN_AXIS_NAMES)
+    return ici, dcn
+
+
 def dcn_axes(mesh: Mesh, axes: Optional[Sequence[Any]] = None) -> Tuple[Any, ...]:
     """The slow (cross-pod) axes among ``axes`` (default: all mesh axes)."""
     names = tuple(axes) if axes is not None else tuple(mesh.axis_names)
-    return tuple(a for a in names if a in DCN_AXIS_NAMES)
+    return split_axis_names(names)[1]
 
 
 def ici_axes(mesh: Mesh, axes: Optional[Sequence[Any]] = None) -> Tuple[Any, ...]:
     """The fast (intra-pod) axes among ``axes`` (default: all mesh axes)."""
     names = tuple(axes) if axes is not None else tuple(mesh.axis_names)
-    return tuple(a for a in names if a not in DCN_AXIS_NAMES)
+    return split_axis_names(names)[0]
 
 
 def cross_mesh_allreduce(m: Monoid, x: Pytree, mesh: Mesh,
@@ -49,6 +60,15 @@ def cross_mesh_allreduce(m: Monoid, x: Pytree, mesh: Mesh,
     """
     ordered = ici_axes(mesh, axes) + dcn_axes(mesh, axes)
     return monoid_hierarchical_allreduce(m, x, ordered)
+
+
+def cross_axes_allreduce(m: Monoid, x: Pytree, axes: Sequence[Any]) -> Pytree:
+    """Name-based :func:`cross_mesh_allreduce` — the collective tier of the
+    execution planner (``core/plan.py``), callable inside shard_map where no
+    Mesh object is at hand.  Axes are classified by name (DCN_AXIS_NAMES)
+    and reduced fast-first."""
+    ici, dcn = split_axis_names(axes)
+    return monoid_hierarchical_allreduce(m, x, ici + dcn)
 
 
 def grad_sync(grads: Pytree, mesh: Mesh,

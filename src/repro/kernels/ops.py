@@ -2,10 +2,14 @@
 
 ``interpret`` defaults to True off-TPU (this container is CPU-only; the
 kernels TARGET TPU — pl.pallas_call + BlockSpec VMEM tiling — and are
-validated in interpret mode against the ref.py oracles).
+validated in interpret mode against the ref.py oracles).  Set
+``REPRO_INTERPRET=1`` to force interpret mode on TPU (debugging) or
+``REPRO_INTERPRET=0`` to force compiled mode in CI; the override is read
+when the wrapper is called (i.e. at trace time for jit'd callers).
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 
 import jax
@@ -16,28 +20,58 @@ from .cms import cms_update_pallas
 from .stripes import stripes_pallas
 from .flash_attention import flash_attention
 
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
 
 def _default_interpret() -> bool:
+    """Interpret-mode default: backend detection, REPRO_INTERPRET override."""
+    env = os.environ.get("REPRO_INTERPRET", "").strip().lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
     return jax.default_backend() != "tpu"
 
 
-@partial(jax.jit, static_argnames=("num_segments", "with_count", "block_n"))
-def segment_fold(values: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
-                 *, with_count: bool = False, block_n: int = 512):
-    """MXU-tiled key-grouped sum (and count): the paper's combiner."""
+@partial(jax.jit, static_argnames=("num_segments", "with_count", "block_n",
+                                   "semiring", "interpret"))
+def _segment_fold_jit(values, seg_ids, num_segments, with_count, block_n,
+                      semiring, interpret):
     return segment_fold_pallas(values, seg_ids, num_segments,
                                with_count=with_count, block_n=block_n,
-                               interpret=_default_interpret())
+                               semiring=semiring, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("num_segments", "block_n"))
-def mean_by_key(values: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
-                *, block_n: int = 512) -> jnp.ndarray:
-    """The paper's running example, kernel edition: extract(sum/count)."""
+def segment_fold(values: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
+                 *, with_count: bool = False, block_n: int = 512,
+                 semiring: str = "sum", interpret: bool | None = None):
+    """MXU-tiled key-grouped semiring fold: the paper's combiner.
+
+    semiring='sum' (default) is the additive family; 'max'/'min' serve the
+    max-plus monoids.  Exact integer inputs round-trip to their dtype.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    return _segment_fold_jit(values, seg_ids, num_segments, with_count,
+                             block_n, semiring, interpret)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "block_n", "interpret"))
+def _mean_by_key_jit(values, seg_ids, num_segments, block_n, interpret):
     sums, counts = segment_fold_pallas(values, seg_ids, num_segments,
                                        with_count=True, block_n=block_n,
-                                       interpret=_default_interpret())
+                                       interpret=interpret)
     return sums / jnp.maximum(counts, 1.0)[:, None]
+
+
+def mean_by_key(values: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int,
+                *, block_n: int = 512,
+                interpret: bool | None = None) -> jnp.ndarray:
+    """The paper's running example, kernel edition: extract(sum/count)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _mean_by_key_jit(values, seg_ids, num_segments, block_n, interpret)
 
 
 @partial(jax.jit, static_argnames=("depth", "width", "block_n"))

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: key-grouped monoid fold (the paper's combiner).
+"""Pallas TPU kernel: key-grouped semiring fold (the paper's combiner).
 
 Hadoop's combiner sorts intermediate pairs and streams them; the TPU
 adaptation (DESIGN.md §5) instead:
@@ -12,9 +12,20 @@ adaptation (DESIGN.md §5) instead:
   napkin math: BN=512, S=512, D=512 => 1.3e8 MACs/block vs 2.6e5 serial VPU
   adds; the MXU path is ~500x denser).
 
-The additive monoids (sum / count / mean's (sum,count) pair) are exactly the
-paper's running example; `with_count=True` appends a ones column so mean's
-two components ride one matmul.
+The kernel is parameterized by semiring, so one lowering path serves the
+whole additive/max-plus monoid family the planner (core/plan.py) registers:
+
+* ``'sum'``  — the additive monoids (sum / count / stripes / mean's
+  (sum, count) pair): one-hot matmul on the MXU.  ``with_count=True``
+  appends a ones column so mean's two components ride one matmul.
+* ``'max'`` / ``'min'`` — the max-plus family (max, min, and 0/1-bitmap
+  bitwise_or): the one-hot mask selects block rows per segment and the VPU
+  takes the running max/min.  This path materializes an (S, BN, D) select,
+  so prefer a smaller ``block_n`` than the additive default.
+
+Exact integer monoids round-trip: integer inputs are accumulated in float32
+(exact for |values| < 2**24) and cast back to the input dtype, with empty
+max/min segments mapped to the dtype's min/max (the integer identity).
 """
 from __future__ import annotations
 
@@ -24,35 +35,78 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+SEMIRINGS = ("sum", "max", "min")
+
+_IDENTITY = {"sum": 0.0, "max": -jnp.inf, "min": jnp.inf}
+
 
 def _segment_fold_kernel(seg_ref, val_ref, out_ref, *, num_segments: int,
-                         block_n: int):
+                         block_n: int, semiring: str):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        out_ref[...] = jnp.full_like(out_ref, _IDENTITY[semiring])
 
     seg = seg_ref[...]                                   # (BN,)
     vals = val_ref[...].astype(jnp.float32)              # (BN, D)
-    # one-hot scatter as an MXU matmul: (S, BN) @ (BN, D)
-    onehot = (seg[None, :] == jax.lax.broadcasted_iota(
-        jnp.int32, (num_segments, block_n), 0)).astype(jnp.float32)
-    out_ref[...] += jax.lax.dot(onehot, vals,
-                                preferred_element_type=jnp.float32)
+    # one-hot scatter mask: padded rows carry seg id == num_segments (out of
+    # range), so they match no row and contribute the semiring identity.
+    mask = seg[None, :] == jax.lax.broadcasted_iota(
+        jnp.int32, (num_segments, block_n), 0)           # (S, BN)
+    if semiring == "sum":
+        out_ref[...] += jax.lax.dot(mask.astype(jnp.float32), vals,
+                                    preferred_element_type=jnp.float32)
+    else:
+        picked = jnp.where(mask[:, :, None], vals[None, :, :],
+                           _IDENTITY[semiring])          # (S, BN, D) on the VPU
+        if semiring == "max":
+            out_ref[...] = jnp.maximum(out_ref[...], picked.max(axis=1))
+        else:
+            out_ref[...] = jnp.minimum(out_ref[...], picked.min(axis=1))
+
+
+def _finish_dtype(out: jnp.ndarray, dtype, semiring: str) -> jnp.ndarray:
+    """Cast the float32 accumulator back for exact integer monoids.
+
+    Floating inputs keep the float32 accumulator (the historical contract);
+    integer inputs round-trip, with ±inf (empty max/min segments) mapped to
+    the integer identity iinfo.min/max — matching jax.ops.segment_max/min.
+    """
+    if not jnp.issubdtype(dtype, jnp.integer):
+        return out
+    info = jnp.iinfo(dtype)
+    if semiring == "max":
+        out = jnp.where(jnp.isneginf(out), float(info.min), out)
+    elif semiring == "min":
+        out = jnp.where(jnp.isposinf(out), float(info.max), out)
+    return out.astype(dtype)
 
 
 def segment_fold_pallas(values: jnp.ndarray, seg_ids: jnp.ndarray,
                         num_segments: int, *, block_n: int = 512,
-                        with_count: bool = False, interpret: bool = True):
+                        semiring: str = "sum", with_count: bool = False,
+                        interpret: bool | None = None):
     """values: (N, D); seg_ids: (N,) int32 in [0, num_segments).
 
-    Returns (S, D) sums — or ((S, D) sums, (S,) counts) with with_count.
-    N is padded to a block multiple with an out-of-range segment id (folded
-    into no real segment — the monoid identity contributes nothing).
+    Returns the (S, D) semiring fold — or ((S, D) sums, (S,) counts) with
+    ``with_count`` (additive semiring only).  N is padded to a block multiple
+    with the out-of-range segment id ``num_segments``, which folds into no
+    real segment — the semiring identity contributes nothing.
+
+    ``interpret=None`` resolves via :func:`repro.kernels.ops._default_interpret`
+    (TPU detection, overridable with ``REPRO_INTERPRET=0/1``).
     """
+    if semiring not in SEMIRINGS:
+        raise ValueError(f"unknown semiring {semiring!r}; one of {SEMIRINGS}")
+    if interpret is None:
+        from .ops import _default_interpret
+        interpret = _default_interpret()
+    orig_dtype = values.dtype
     N, D = values.shape
     if with_count:
+        if semiring != "sum":
+            raise ValueError("with_count requires the additive semiring")
         values = jnp.concatenate(
             [values.astype(jnp.float32), jnp.ones((N, 1), jnp.float32)], axis=1)
         D += 1
@@ -61,12 +115,11 @@ def segment_fold_pallas(values: jnp.ndarray, seg_ids: jnp.ndarray,
         values = jnp.concatenate(
             [values, jnp.zeros((pad, D), values.dtype)], axis=0)
         seg_ids = jnp.concatenate(
-            [seg_ids, jnp.zeros((pad,), seg_ids.dtype)], axis=0)
-        # padded rows are zeros: they add identity to segment 0
+            [seg_ids, jnp.full((pad,), num_segments, seg_ids.dtype)], axis=0)
     grid = ((N + pad) // block_n,)
     out = pl.pallas_call(
         functools.partial(_segment_fold_kernel, num_segments=num_segments,
-                          block_n=block_n),
+                          block_n=block_n, semiring=semiring),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_n,), lambda i: (i,)),
@@ -77,5 +130,5 @@ def segment_fold_pallas(values: jnp.ndarray, seg_ids: jnp.ndarray,
         interpret=interpret,
     )(seg_ids.astype(jnp.int32), values)
     if with_count:
-        return out[:, :-1], out[:, -1]
-    return out
+        return _finish_dtype(out[:, :-1], orig_dtype, semiring), out[:, -1]
+    return _finish_dtype(out, orig_dtype, semiring)

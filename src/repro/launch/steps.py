@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..core import monoids
+from ..core.plan import execute_fold
 from ..models import (ModelConfig, RunCtx, decode_step, forward, init_cache,
                       loss_fn, param_axes, param_shapes, unembed)
 from ..optim import OptConfig, adamw_update, opt_state_shapes
@@ -144,18 +146,15 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell, *,
                 mbatch = jax.tree_util.tree_map(reshape_mb, batch)
                 grad_fn = jax.value_and_grad(one_loss, has_aux=True)
 
-                def mb_step(acc, mb):
-                    (loss, metrics), grads = grad_fn(params, mb)
-                    g_acc, m_acc = acc
-                    g_acc = jax.tree_util.tree_map(jnp.add, g_acc, grads)
-                    m_acc = jax.tree_util.tree_map(jnp.add, m_acc, metrics)
-                    return (g_acc, m_acc), None
+                def one_grad(mb):
+                    (_, metrics), grads = grad_fn(params, mb)
+                    return grads, metrics
 
-                first = jax.tree_util.tree_map(lambda x: x[0], mbatch)
-                g0, m0 = jax.eval_shape(lambda: grad_fn(params, first)[::-1])
-                init = (jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), g0),
-                        jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), m0[1]))
-                (grads, metrics), _ = jax.lax.scan(mb_step, init, mbatch)
+                # in-mapper combining over microbatches: the planner's scan
+                # tier folds the gradient Sum monoid without materializing
+                # per-microbatch grads (paper, Algorithm 4)
+                grads, metrics = execute_fold(monoids.sum_, mbatch,
+                                              map_fn=one_grad, layout="scan")
                 gscale = 1.0 / num_microbatches
             else:
                 (loss, metrics), grads = jax.value_and_grad(

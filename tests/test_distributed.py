@@ -90,6 +90,34 @@ print("ok")
 """)
 
 
+def test_execute_fold_mesh_tier_hierarchical():
+    """The planner's collective tier on an 8-device (data x pod) mesh: a
+    keyed fold per shard, then ICI-first-then-DCN combine — one entry point,
+    same answer as the global fold."""
+    run_distributed(PRELUDE + """
+from repro.core import execute_fold, monoids
+mesh_pod = jax.make_mesh((4, 2), ("data", "pod"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+rng = np.random.default_rng(5)
+n, keys = 128, 8
+vals = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+segs = jnp.asarray(rng.integers(0, keys, n).astype(np.int32))
+want = jax.ops.segment_sum(vals, segs, num_segments=keys)
+
+def body(v, k):
+    return execute_fold(monoids.sum_, v, segment_ids=k, num_segments=keys,
+                        mesh_axes=("pod", "data"))
+
+spec = jax.sharding.PartitionSpec(("data", "pod"))
+out = jax.shard_map(body, mesh=mesh_pod, in_specs=(spec, spec),
+                    out_specs=jax.sharding.PartitionSpec(),
+                    check_vma=False)(vals, segs)
+np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4,
+                           atol=1e-4)
+print("ok")
+""")
+
+
 def test_moe_replicated_matches_local():
     run_distributed(PRELUDE + """
 import dataclasses

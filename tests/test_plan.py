@@ -1,0 +1,263 @@
+"""Planner/oracle equivalence: execute_fold must agree with the generic
+monoid folds for every zoo monoid across all tiers, and registered kernel
+lowerings must preserve the monoid laws (associativity / identity) — the
+invariant that licenses the planner to re-bracket and relocate folds."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from _hyp import given, settings, st  # hypothesis, or skip-stub when absent
+
+from repro.core import execute_fold, local_fold, monoids, plan_fold
+from repro.core.monoid import _KERNEL_LOWERINGS
+from repro.core.plan import (_segment_fold_generic, collective_algorithm,
+                             segment_fold)
+
+KEYED_LAYOUTS = ("kernel", "segment", "scan")
+
+
+def _keyed_samples(name, n, d, rng):
+    """(monoid, lifted values pytree) for a keyed fold of n records."""
+    vals = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    if name == "sum":
+        return monoids.sum_, vals
+    if name == "max":
+        return monoids.max_, vals
+    if name == "min":
+        return monoids.min_, vals
+    if name == "count":
+        return monoids.count, jnp.ones((n,), jnp.int32)
+    if name == "mean":
+        return monoids.mean, (vals, jnp.ones((n,), jnp.int32))
+    if name == "bitwise_or":
+        bits = jnp.asarray(rng.integers(0, 2, size=(n, d)).astype(np.uint8))
+        return monoids.bitwise_or, bits
+    raise ValueError(name)
+
+
+def _assert_tree_close(m, got, want, rtol=1e-4, atol=1e-4):
+    for g, w in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(g, np.float64),
+                                   np.asarray(w, np.float64),
+                                   rtol=rtol, atol=atol, err_msg=m.name)
+
+
+@settings(max_examples=8, deadline=None)
+@given(name=st.sampled_from(["sum", "max", "min", "count", "mean",
+                             "bitwise_or"]),
+       n=st.integers(5, 120), d=st.integers(1, 9), s=st.integers(2, 10),
+       layout=st.sampled_from(KEYED_LAYOUTS))
+def test_keyed_tiers_match_generic_oracle(name, n, d, s, layout):
+    """Every tier == the generic serial-scan oracle, for every keyed zoo
+    monoid (the planner may choose any tier without changing the answer)."""
+    rng = np.random.default_rng(n * d + s)
+    m, values = _keyed_samples(name, n, d, rng)
+    segs = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    got = execute_fold(m, values, segment_ids=segs, num_segments=s,
+                       layout=layout, block_n=64)
+    want = _segment_fold_generic(m, values, segs, s)
+    _assert_tree_close(m, got, want)
+
+
+@pytest.mark.parametrize("layout", ["tree", "scan"])
+@pytest.mark.parametrize("name", sorted(monoids.REGISTRY))
+def test_flat_tiers_match_local_fold(name, layout):
+    """Flat execute_fold == local_fold for EVERY registry monoid (incl. the
+    non-commutative and pytree-state ones)."""
+    m = monoids.REGISTRY[name]
+    rng = np.random.default_rng(hash(name) % 2**32)
+    n, d = 9, 4
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    if name in ("sum", "prod", "max", "min"):
+        values = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    elif name == "bitwise_or":
+        values = jnp.asarray(rng.integers(0, 2, size=(n, d)).astype(np.uint8))
+    elif name in ("mean", "count", "welford", "logsumexp"):
+        values = jax.vmap(m.lift)(x)
+    elif name == "attn_state":
+        values = (x, jnp.abs(x) + 0.5,
+                  jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)))
+    elif name == "affine_scan":
+        values = (jnp.asarray(rng.uniform(0.5, 1.0, n).astype(np.float32)), x)
+    else:
+        pytest.skip(f"no sample builder for {name}")
+    got = execute_fold(m, values, layout=layout)
+    want = local_fold(m, values, strategy="tree")
+    _assert_tree_close(m, got, want)
+
+
+@pytest.mark.parametrize("name", sorted(_KERNEL_LOWERINGS))
+def test_kernel_lowering_preserves_associativity_and_identity(name):
+    """Law check for every registered lowering: re-bracketing the keyed fold
+    across an arbitrary split == one fold (associativity), and keys that
+    receive no records hold the monoid identity."""
+    rng = np.random.default_rng(7)
+    n, d, s = 90, 3, 6
+    m, values = _keyed_samples(name if name != "stripes" else "sum", n, d, rng)
+    if name == "stripes":
+        m = monoids.stripes
+    # route every record to keys [1, s-1): key 0 and key s-1 stay empty
+    segs = jnp.asarray(rng.integers(1, s - 1, n).astype(np.int32))
+    lower = _KERNEL_LOWERINGS[name].fn
+
+    full = lower(values, segs, s, block_n=32)
+    cut = 41   # deliberately not a block multiple
+    head = jax.tree_util.tree_map(lambda v: v[:cut], values)
+    tail = jax.tree_util.tree_map(lambda v: v[cut:], values)
+    rebracketed = jax.vmap(m.combine)(lower(head, segs[:cut], s, block_n=32),
+                                      lower(tail, segs[cut:], s, block_n=32))
+    _assert_tree_close(m, rebracketed, full)
+
+    one = jax.tree_util.tree_map(lambda v: v[0], values)
+    identity = m.identity_like(one)
+    for empty_key in (0, s - 1):
+        got = jax.tree_util.tree_map(lambda v: v[empty_key], full)
+        _assert_tree_close(m, got, identity)
+
+
+def test_integer_monoids_round_trip_dtype():
+    """Exact integer monoids keep their dtype through the kernel tier."""
+    rng = np.random.default_rng(11)
+    segs = jnp.asarray(rng.integers(0, 5, 64).astype(np.int32))
+
+    ivals = jnp.asarray(rng.integers(-100, 100, size=(64, 3)).astype(np.int32))
+    got = execute_fold(monoids.sum_, ivals, segment_ids=segs, num_segments=5,
+                       layout="kernel", block_n=32)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jax.ops.segment_sum(ivals, segs,
+                                                        num_segments=5)))
+
+    imax = execute_fold(monoids.max_, ivals, segment_ids=segs, num_segments=5,
+                        layout="kernel", block_n=32)
+    assert imax.dtype == jnp.int32
+    np.testing.assert_array_equal(
+        np.asarray(imax), np.asarray(jax.ops.segment_max(ivals, segs,
+                                                         num_segments=5)))
+
+    counts = execute_fold(monoids.count, jnp.ones((64,), jnp.int32),
+                          segment_ids=segs, num_segments=5, layout="kernel",
+                          block_n=32)
+    assert counts.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(counts),
+                                  np.bincount(np.asarray(segs), minlength=5))
+
+
+def test_empty_int_max_segment_gets_dtype_identity():
+    """An empty segment under integer max == iinfo.min (segment_max's own
+    convention), not a leaked -inf cast."""
+    vals = jnp.asarray([[3], [7]], jnp.int32)
+    segs = jnp.asarray([0, 0], jnp.int32)
+    out = execute_fold(monoids.max_, vals, segment_ids=segs, num_segments=3,
+                       layout="kernel", block_n=32)
+    assert int(out[1, 0]) == jnp.iinfo(jnp.int32).min
+    assert int(out[0, 0]) == 7
+
+
+def test_default_interpret_env_override(monkeypatch):
+    from repro.kernels import ops
+
+    monkeypatch.setenv("REPRO_INTERPRET", "0")
+    assert ops._default_interpret() is False
+    monkeypatch.setenv("REPRO_INTERPRET", "1")
+    assert ops._default_interpret() is True
+    monkeypatch.delenv("REPRO_INTERPRET")
+    assert ops._default_interpret() == (jax.default_backend() != "tpu")
+
+
+def test_plan_reports_tiers_and_collective_bytes():
+    """plan_fold is a pure cost model: ShapeDtypeStructs in, tier chain and
+    predicted wire bytes out — ICI axes reduced before the DCN pod axis."""
+    pairs = jax.ShapeDtypeStruct((128, 4), jnp.float32)
+    segs = jax.ShapeDtypeStruct((128,), jnp.int32)
+    p = plan_fold(monoids.sum_, pairs, segment_ids=segs, num_segments=16,
+                  mesh_axes=("pod", "data"),
+                  axis_sizes={"data": 8, "pod": 2})
+    kinds = [t.kind for t in p.tiers]
+    assert kinds[0] in ("kernel", "segment_ops")
+    assert kinds[1:] == ["allreduce", "allreduce"]
+    assert "ici:data" in p.tiers[1].detail          # fast axis first...
+    assert "dcn:pod" in p.tiers[2].detail           # ...slow pod axis last
+    table_bytes = 16 * 4 * 4
+    assert p.out_bytes == table_bytes
+    assert p.tiers[1].wire_bytes == 2 * table_bytes * (8 - 1)   # ring
+    assert p.tiers[2].wire_bytes == 2 * table_bytes * (2 - 1)
+
+    # generic monoids can't ring-reduce: the planner predicts gather bytes
+    assert collective_algorithm(monoids.sum_) == "ring"
+    assert collective_algorithm(monoids.top_k(4)) == "gather"
+
+
+def test_naive_plan_costs_more_than_combined_plan():
+    """Algorithm 1 (pre_combine=False) vs 3/4, straight off the planner."""
+    pairs = jax.ShapeDtypeStruct((1024, 1), jnp.float32)
+    segs = jax.ShapeDtypeStruct((1024,), jnp.int32)
+    kw = dict(segment_ids=segs, num_segments=8, mesh_axes=("shard",),
+              axis_sizes={"shard": 8})
+    naive = plan_fold(monoids.sum_, pairs, pre_combine=False, **kw)
+    combined = plan_fold(monoids.sum_, pairs, **kw)
+    assert naive.tiers[0].kind == "gather_pairs"
+    assert naive.collective_wire_bytes > combined.collective_wire_bytes
+
+
+def test_segment_fold_wrapper_back_compat():
+    """The pre-planner keyed-fold API still dispatches correctly."""
+    rng = np.random.default_rng(2)
+    vals = jnp.asarray(rng.normal(size=(40, 2)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, 4, 40).astype(np.int32))
+    want = jax.ops.segment_sum(vals, segs, num_segments=4)
+    for impl in ("auto", "onehot", "scan"):
+        got = segment_fold(monoids.sum_, vals, segs, 4, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        segment_fold(monoids.max_, vals, segs, 4, impl="onehot")
+
+
+def test_execute_fold_keyed_init():
+    rng = np.random.default_rng(3)
+    vals = jnp.asarray(rng.normal(size=(30, 2)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, 4, 30).astype(np.int32))
+    init = jnp.asarray(rng.normal(size=(4, 2)).astype(np.float32))
+    for layout in KEYED_LAYOUTS:
+        got = execute_fold(monoids.sum_, vals, segment_ids=segs,
+                           num_segments=4, layout=layout, init=init,
+                           block_n=32)
+        want = init + jax.ops.segment_sum(vals, segs, num_segments=4)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_in_mapper_map_fn_fuses_lift():
+    """map_fn + scan layout == materialize-then-fold (Alg 4 == Alg 3)."""
+    xs = jnp.arange(24, dtype=jnp.float32)
+    fused = execute_fold(monoids.mean, xs, map_fn=lambda x: x * 2 + 1,
+                         layout="scan")
+    materialized = execute_fold(
+        monoids.mean, jax.vmap(lambda x: monoids.mean.lift(x * 2 + 1))(xs),
+        layout="tree")
+    np.testing.assert_allclose(float(monoids.mean.extract(fused)),
+                               float(monoids.mean.extract(materialized)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(float(monoids.mean.extract(fused)),
+                               float(jnp.mean(xs * 2 + 1)), rtol=1e-6)
+
+
+def test_mesh_tier_single_device():
+    """The collective tier runs inside shard_map (1-device smoke; the
+    8-device path is exercised in test_distributed.py)."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    vals = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+
+    def body(v):
+        return execute_fold(monoids.sum_, v, mesh_axes=("data",))
+
+    out = jax.shard_map(body, mesh=mesh,
+                        in_specs=jax.sharding.PartitionSpec("data"),
+                        out_specs=jax.sharding.PartitionSpec(),
+                        check_vma=False)(vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vals.sum(0)),
+                               rtol=1e-6)
