@@ -53,7 +53,9 @@ def local_fold(m: Monoid, xs: Pytree, *, axis: int = 0, strategy: str = "tree") 
 # cross-device combine — the shuffle, minimized
 # ---------------------------------------------------------------------------
 
-_PSUM_LIKE = {"sum", "count", "stripes", "grad_sum"}
+# matched against Monoid.name: monoids.stripes / monoids.grad_sum are
+# aliases of sum_ (name 'sum'), so they need no entries of their own
+_PSUM_LIKE = {"sum", "count"}
 _PMAX_LIKE = {"max", "bitwise_or"}   # uint OR == max per bit-plane is NOT true;
 # bitwise_or gets its own branch below.
 _PMIN_LIKE = {"min"}

@@ -42,7 +42,6 @@ _SEGMENT_OPS: Mapping[str, Callable] = {
     "sum": jax.ops.segment_sum,
     "count": jax.ops.segment_sum,
     "mean": jax.ops.segment_sum,   # applied leaf-wise to (sum, count)
-    "stripes": jax.ops.segment_sum,
     "max": jax.ops.segment_max,
     "min": jax.ops.segment_min,
     "bitwise_or": jax.ops.segment_max,   # 0/1 bitmaps: OR == max
@@ -116,7 +115,9 @@ def _mean_pair_lowering() -> KernelLowering:
 # The additive family rides the MXU one-hot matmul; the max-plus family the
 # VPU masked reduce.  bitwise_or qualifies because the sketch monoids keep
 # 0/1 uint8 bitmaps, where OR == max (see aggregation.monoid_allreduce).
-for _name in ("sum", "count", "stripes"):
+# (monoids.stripes is an alias of sum_ — Monoid.name 'sum' — so the stripes
+# fold rides the 'sum' registration; no separate entry needed.)
+for _name in ("sum", "count"):
     register_kernel_lowering(_name, _semiring_lowering("sum"))
 register_kernel_lowering("mean", _mean_pair_lowering())
 register_kernel_lowering("max", _semiring_lowering("max"))
@@ -240,8 +241,11 @@ def _kernel_exact(value_shape: Pytree, num_records: int) -> bool:
     """
     for leaf in jax.tree_util.tree_leaves(value_shape):
         if jnp.issubdtype(leaf.dtype, jnp.integer):
-            worst = abs(int(jnp.iinfo(leaf.dtype).min)) * max(num_records, 1)
-            if worst >= 2 ** 24:
+            info = jnp.iinfo(leaf.dtype)
+            # extreme magnitude: unsigned dtypes have info.min == 0, so the
+            # bound must come from info.max there
+            extreme = max(abs(int(info.min)), int(info.max))
+            if extreme * max(num_records, 1) >= 2 ** 24:
                 return False
     return True
 
@@ -509,13 +513,35 @@ def segment_fold(m: Monoid, values: Pytree, segment_ids: jnp.ndarray,
 
     Thin wrapper over :func:`execute_fold` kept for callers that predate the
     planner.  impl: 'auto' — segment primitive when the monoid admits one,
-    else the generic scan; 'onehot' — force the one-hot matmul kernel tier
-    (additive monoids only); 'scan' — force the generic path.
+    else the generic scan; 'onehot' — the one-hot matmul strategy (additive
+    monoids only): the Pallas kernel tier when it applies (TPU backend,
+    kernel-compatible dtypes), the historical pure-XLA ``jax.nn.one_hot``
+    matmul otherwise; either way results are cast back to each input leaf's
+    dtype, the pre-planner onehot contract; 'scan' — force the generic path.
     """
     if impl == "onehot":
-        if m.name not in ("sum", "mean", "count", "stripes"):
+        if m.name not in ("sum", "mean", "count"):
             raise ValueError("onehot impl is only meaningful for additive monoids")
-        layout = "kernel"
+        if (jax.default_backend() == "tpu"
+                and _kernel_compatible(m, _one_slice(values))):
+            out = execute_fold(m, values, segment_ids=segment_ids,
+                               num_segments=num_segments, init=init,
+                               layout="kernel")
+            return jax.tree_util.tree_map(
+                lambda o, v: o.astype(jnp.asarray(v).dtype), out, values)
+        # Pure-XLA one-hot matmul, the pre-planner implementation: off TPU
+        # the Pallas kernel only runs in interpret mode, and it also rejects
+        # leaves (e.g. bool) the matmul's f32 cast handles fine.  Explicit
+        # layout='kernel' through execute_fold stays the always-Pallas path.
+        def onehot_sum(v):
+            v2 = jnp.asarray(v)
+            flat = v2.reshape((v2.shape[0], -1)).astype(jnp.float32)
+            oh = jax.nn.one_hot(segment_ids, num_segments,
+                                dtype=jnp.float32, axis=0)
+            out = oh @ flat  # (S, V) on the MXU
+            return out.reshape((num_segments,) + v2.shape[1:]).astype(v2.dtype)
+        folded = jax.tree_util.tree_map(onehot_sum, values)
+        return _seg_add_init(m, folded, init)
     elif impl == "scan":
         layout = "scan"
     elif impl == "auto":

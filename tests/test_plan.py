@@ -95,9 +95,7 @@ def test_kernel_lowering_preserves_associativity_and_identity(name):
     receive no records hold the monoid identity."""
     rng = np.random.default_rng(7)
     n, d, s = 90, 3, 6
-    m, values = _keyed_samples(name if name != "stripes" else "sum", n, d, rng)
-    if name == "stripes":
-        m = monoids.stripes
+    m, values = _keyed_samples(name, n, d, rng)
     # route every record to keys [1, s-1): key 0 and key s-1 stay empty
     segs = jnp.asarray(rng.integers(1, s - 1, n).astype(np.int32))
     lower = _KERNEL_LOWERINGS[name].fn
@@ -154,6 +152,63 @@ def test_empty_int_max_segment_gets_dtype_identity():
                        layout="kernel", block_n=32)
     assert int(out[1, 0]) == jnp.iinfo(jnp.int32).min
     assert int(out[0, 0]) == 7
+
+
+def test_auto_layout_down_tiers_wide_integers(monkeypatch):
+    """layout='auto' must keep the f32-accumulator kernel tier away from
+    integer inputs whose worst-case per-key total can exceed 2**24 — for
+    UNSIGNED dtypes the bound comes from iinfo.max (iinfo.min is 0)."""
+    from repro.core import plan as plan_mod
+
+    monkeypatch.setattr(plan_mod.jax, "default_backend", lambda: "tpu")
+    segs = jax.ShapeDtypeStruct((128,), jnp.int32)
+
+    for dt in (jnp.uint32, jnp.uint64, jnp.int32):
+        vals = jax.ShapeDtypeStruct((128, 4), dt)
+        p = plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=8)
+        assert p.local_tier.kind == "segment_ops", dt
+
+    # narrow unsigned stays exact for small batches ...
+    small = jax.ShapeDtypeStruct((128, 4), jnp.uint8)
+    p = plan_fold(monoids.sum_, small, segment_ids=segs, num_segments=8)
+    assert p.local_tier.kind == "kernel"
+    # ... but not once 255 * N can reach 2**24 (~65.8k records on one key)
+    big = jax.ShapeDtypeStruct((70_000, 4), jnp.uint8)
+    segs_big = jax.ShapeDtypeStruct((70_000,), jnp.int32)
+    p = plan_fold(monoids.sum_, big, segment_ids=segs_big, num_segments=8)
+    assert p.local_tier.kind == "segment_ops"
+
+
+def test_segment_fold_onehot_bool_leaves_any_backend(monkeypatch):
+    """The pre-planner onehot contract covers dtypes the Pallas kernel tier
+    rejects (bool): the wrapper must fall back to the XLA matmul rather than
+    raise, even when the backend reports TPU."""
+    from repro.core import plan as plan_mod
+
+    vals = jnp.asarray([[True], [False], [True], [True]])
+    segs = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    want = np.asarray([[1], [2]])
+    for backend in (jax.default_backend(), "tpu"):
+        monkeypatch.setattr(plan_mod.jax, "default_backend", lambda b=backend: b)
+        got = segment_fold(monoids.sum_, vals, segs, 2, impl="onehot")
+        assert got.dtype == jnp.bool_
+        np.testing.assert_array_equal(np.asarray(got), want.astype(bool))
+
+
+def test_segment_fold_onehot_keeps_float_dtype():
+    """impl='onehot' keeps the pre-planner contract: results come back in the
+    input leaf's dtype (bf16 in, bf16 out), on and off TPU."""
+    rng = np.random.default_rng(5)
+    vals = jnp.asarray(rng.normal(size=(32, 2)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, 4, 32).astype(np.int32))
+    for dt in (jnp.float32, jnp.bfloat16):
+        got = segment_fold(monoids.sum_, vals.astype(dt), segs, 4,
+                           impl="onehot")
+        assert got.dtype == dt
+    want = jax.ops.segment_sum(vals, segs, num_segments=4)
+    got = segment_fold(monoids.sum_, vals, segs, 4, impl="onehot")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_default_interpret_env_override(monkeypatch):
