@@ -1,0 +1,79 @@
+"""Batched serving path: decode step + per-step keyed-fold aggregation.
+
+The serve-tier rows CI guards (``serve_`` prefix in ``run.py --compare``):
+
+* ``serve_decode_step``   — one batched decode step (model forward + cache
+  update) on the tiny smoke config.
+* ``serve_metrics_fold``  — the per-step aggregation alone: ONE
+  planner-lowered masked keyed fold carrying logprob sums / token counts /
+  stop hits for the whole batch.
+* ``serve_batch_e2e``     — a full ragged batch decoded to completion
+  through ``run_batched_decode`` (prefill + decode + metrics folds),
+  including fresh-cache setup, reported with tok/s derived.
+
+On CPU the Pallas tier runs in interpret mode (kernels/ops.py default);
+this is the CI `serve-smoke` workload.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.serve import (build_serve_step, decode_metrics_init,
+                                decode_metrics_step, run_batched_decode)
+from repro.runtime.batcher import RequestBatcher
+
+from .common import row, time_fn
+
+ARCH = "qwen3-0.6b"
+MAX_BATCH = 4
+MAX_PROMPT = 16
+GEN = 8
+
+
+def main():
+    cfg, built, params, make_cache = build_serve_step(
+        ARCH, max_batch=MAX_BATCH, max_seq=MAX_PROMPT + GEN)
+
+    # -- one decode step ----------------------------------------------------
+    cache = make_cache()
+    tok = jnp.ones((MAX_BATCH, 1), jnp.int32)
+    us = time_fn(lambda: built.fn(params, cache, tok)[0])
+    row(f"serve_decode_step[{cfg.name},B={MAX_BATCH}]", us,
+        f"{MAX_BATCH * 1e6 / us:.0f} tok/s")
+
+    # -- the per-step aggregation fold (request slot == segment id) ---------
+    B = 8
+    rng = np.random.default_rng(0)
+    table = decode_metrics_init(B)
+    logits = jnp.asarray(rng.normal(size=(B, cfg.vocab_size)).astype(np.float32))
+    sampled = jnp.asarray(rng.integers(0, cfg.vocab_size, B).astype(np.int32))
+    slots = jnp.arange(B, dtype=jnp.int32)
+    active = jnp.asarray(rng.integers(0, 2, B).astype(bool))
+    # µs-scale call: take a bigger sample so the CI regression gate (20%)
+    # sees the median, not scheduler noise
+    us = time_fn(lambda: decode_metrics_step(table, logits, sampled, slots,
+                                             active, num_slots=B, eos_id=0),
+                 warmup=5, iters=30)
+    row(f"serve_metrics_fold[B={B},cols=3]", us, "one keyed fold/step")
+
+    # -- a ragged batch end-to-end ------------------------------------------
+    batcher = RequestBatcher(max_batch_size=MAX_BATCH, max_wait_s=0.0)
+    for i in range(MAX_BATCH - 1):           # deliberately partial: ragged
+        plen = 4 + 3 * i
+        batcher.submit(rng.integers(1, cfg.vocab_size, plen).tolist(),
+                       max_new_tokens=GEN)
+    batch = batcher.flush(force=True)
+
+    def e2e():
+        res = run_batched_decode(built, params, make_cache(), batch,
+                                 eos_id=0, temperature=0.0)
+        return res.metrics["tokens"]
+
+    us = time_fn(e2e, warmup=1, iters=3)
+    toks = int(np.sum(e2e()))
+    row(f"serve_batch_e2e[{cfg.name},reqs={len(batch)}/{MAX_BATCH},gen={GEN}]",
+        us, f"{toks * 1e6 / us:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,11 +5,15 @@ Prints ``name,us_per_call,derived`` CSV rows. The roofline table (the per-
 ``python -m benchmarks.roofline`` from the dry-run JSONs.
 
 ``--quick`` runs only the fast algorithm/aggregation/sketch sections (the
-CI bench-smoke job); ``--json PATH`` additionally writes every row to a
-``BENCH_*.json`` artifact so the perf trajectory accumulates per commit;
-``--compare OLD_JSON`` diffs the fresh run against a previous artifact and
-exits non-zero on a >20% throughput regression in the guarded hot rows
-(``segment_fold``/``mean_by_key`` — the planner's kernel tier).
+CI bench-smoke job); ``--serve`` runs only the batched serving section (the
+CI serve-smoke job, interpret mode on CPU); ``--json PATH`` additionally
+writes every row to a ``BENCH_*.json`` artifact so the perf trajectory
+accumulates per commit; ``--compare OLD_JSON`` diffs the fresh run against
+a previous artifact and exits non-zero on a >20% throughput regression in
+the guarded hot rows (``segment_fold``/``mean_by_key`` — the planner's
+kernel tier — and the ``serve_`` decode/fold rows).  A missing baseline is
+skipped with a warning, or is an error under ``--require-baseline`` (CI on
+main: the trajectory must never silently restart).
 """
 import argparse
 import json
@@ -17,11 +21,11 @@ import platform
 import sys
 
 from . import (bench_aggregation, bench_kernels, bench_mapreduce,
-               bench_sketches, bench_train)
+               bench_serve, bench_sketches, bench_train)
 from . import common
 
-# rows guarded by --compare: the planner-lowered hot paths
-GUARDED_PREFIXES = ("segment_fold", "mean_by_key")
+# rows guarded by --compare: the planner-lowered hot paths + the serve tier
+GUARDED_PREFIXES = ("segment_fold", "mean_by_key", "serve_")
 REGRESSION_TOLERANCE = 1.20   # fail on >20% slower than the previous artifact
 
 
@@ -46,25 +50,37 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only (CI bench-smoke)")
+    ap.add_argument("--serve", action="store_true",
+                    help="batched serving section only (CI serve-smoke)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to a BENCH_*.json artifact")
     ap.add_argument("--compare", default=None, metavar="OLD_JSON",
                     help="diff against a previous BENCH_*.json; exit 1 on "
-                         ">20%% regression in segment_fold/mean_by_key rows")
+                         ">20%% regression in segment_fold/mean_by_key/"
+                         "serve_ rows")
+    ap.add_argument("--require-baseline", action="store_true",
+                    help="with --compare: a missing/unreadable baseline is "
+                         "an error, not a silent skip")
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
-    print("# -- Algorithms 1/3/4: mean-by-key & word count ------------------")
-    bench_mapreduce.main()
-    print("# -- aggregation layer: folds, planner tiers, grad accum, metrics --")
-    bench_aggregation.main()
-    print("# -- sketch monoids (paper section 3) ----------------------------")
-    bench_sketches.main()
-    if not args.quick:
-        print("# -- Pallas kernels vs XLA refs (interpret mode on CPU) ----------")
-        bench_kernels.main()
-        print("# -- end-to-end train step (smoke configs, CPU) ------------------")
-        bench_train.main()
+    if args.serve:
+        print("# -- batched serving path (planner-lowered keyed folds, CPU) -----")
+        bench_serve.main()
+    else:
+        print("# -- Algorithms 1/3/4: mean-by-key & word count ------------------")
+        bench_mapreduce.main()
+        print("# -- aggregation layer: folds, planner tiers, grad accum, metrics --")
+        bench_aggregation.main()
+        print("# -- sketch monoids (paper section 3) ----------------------------")
+        bench_sketches.main()
+        if not args.quick:
+            print("# -- Pallas kernels vs XLA refs (interpret mode on CPU) ----------")
+            bench_kernels.main()
+            print("# -- end-to-end train step (smoke configs, CPU) ------------------")
+            bench_train.main()
+            print("# -- batched serving path (planner-lowered keyed folds, CPU) -----")
+            bench_serve.main()
 
     if args.json:
         import jax
@@ -84,6 +100,10 @@ def main(argv=None) -> int:
             with open(args.compare) as f:
                 old = json.load(f)
         except (OSError, ValueError):
+            if args.require_baseline:
+                print(f"# MISSING BASELINE: no usable previous artifact at "
+                      f"{args.compare} and --require-baseline is set")
+                return 1
             print(f"# no usable previous artifact at {args.compare}; "
                   "skipping diff")
             return 0

@@ -38,7 +38,7 @@ import jax.numpy as jnp
 
 from .monoid import Monoid, MonoidTypeError, Pytree, tree_fold
 from .aggregation import monoid_reduce_scatter
-from .plan import Plan, execute_fold, plan_fold
+from .plan import Plan, _static_valid_count, execute_fold, plan_fold
 
 STRATEGIES = ("naive", "combiner", "in_mapper")
 
@@ -228,7 +228,7 @@ class MapReduceJob:
 
     # -- accounting --------------------------------------------------------------
     def plan(self, records: Pytree, *, strategy: str,
-             num_shards: int) -> Plan:
+             num_shards: int, valid_mask=None) -> Plan:
         """The execution plan for this job's per-shard fold + shuffle.
 
         The plan is built from ShapeDtypeStructs (no FLOPs): one shard's
@@ -236,6 +236,10 @@ class MapReduceJob:
         axis of size ``num_shards``.  strategy='naive' models Algorithm 1
         (``pre_combine=False``: raw pairs cross the wire un-combined);
         'combiner'/'in_mapper' differ only in the local tier.
+
+        ``valid_mask`` (one bool per record, whole job) marks padding rows
+        that never become pairs; the per-shard plan uses shard 0's slice as
+        representative for the masked byte model.
         """
         if strategy not in STRATEGIES:
             raise ValueError(f"strategy must be one of {STRATEGIES}")
@@ -248,24 +252,39 @@ class MapReduceJob:
             lambda s: jax.ShapeDtypeStruct((local_n,) + s.shape, s.dtype),
             value_shape)
         seg = jax.ShapeDtypeStruct((local_n,), jnp.int32)
+        shard_mask = None
+        if valid_mask is not None:
+            if isinstance(valid_mask, jax.ShapeDtypeStruct):
+                # shape-only planning: the mask stays abstract per shard
+                shard_mask = jax.ShapeDtypeStruct((local_n,), jnp.bool_)
+            else:
+                shard_mask = jnp.asarray(valid_mask, jnp.bool_)[:local_n]
         return plan_fold(
             self.monoid, pairs, segment_ids=seg, num_segments=self.num_keys,
+            valid_mask=shard_mask,
             mesh_axes=("shard",), axis_sizes={"shard": num_shards},
             layout="scan" if strategy == "in_mapper" else "auto",
             pre_combine=strategy != "naive")
 
-    def stats(self, records: Pytree, *, strategy: str, num_shards: int) -> ShuffleStats:
+    def stats(self, records: Pytree, *, strategy: str, num_shards: int,
+              valid_mask=None) -> ShuffleStats:
         """The paper's cost model for this job on ``num_shards`` mappers —
-        every byte figure is read off the execution plan."""
+        every byte figure is read off the execution plan.  With a ragged
+        ``valid_mask`` only valid rows become pairs, so only they are
+        counted as intermediate/shuffled values."""
         n = jax.tree_util.tree_leaves(records)[0].shape[0]
-        plan = self.plan(records, strategy=strategy, num_shards=num_shards)
+        plan = self.plan(records, strategy=strategy, num_shards=num_shards,
+                         valid_mask=valid_mask)
+        n_valid = _static_valid_count(valid_mask)
+        if n_valid is None:       # no mask, or abstract: count every row
+            n_valid = n
         vbytes = plan.value_bytes
         table_values = self.num_keys * num_shards
 
         if strategy == "naive":
-            inter, shuffled = n, n
+            inter, shuffled = n_valid, n_valid
         elif strategy == "combiner":
-            inter, shuffled = n + table_values, table_values
+            inter, shuffled = n_valid + table_values, table_values
         else:  # in_mapper: only the table is ever live
             inter, shuffled = table_values, table_values
         return ShuffleStats(

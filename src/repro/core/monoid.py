@@ -45,9 +45,11 @@ class KernelLowering:
 
     semiring: which semiring the kernel's one-hot matmul/reduce runs in
       ('sum' for additive monoids, 'max'/'min' for the max-plus family).
-    fn: ``(values, seg_ids, num_segments, *, block_n, interpret) -> table`` —
-      applied leaf-wise to the lifted value pytree; returns the per-key table
-      with leading axis ``num_segments``.
+    fn: ``(values, seg_ids, num_segments, *, block_n, valid_mask,
+      interpret) -> table`` — applied leaf-wise to the lifted value pytree;
+      returns the per-key table with leading axis ``num_segments``.
+      ``valid_mask`` (one bool per record, or None) marks rows that must
+      contribute the semiring identity — ragged/padded batches.
     """
 
     semiring: str

@@ -403,13 +403,21 @@ def hyperloglog(precision: int = 8) -> Monoid:
     )
 
 
-def hll_update_batch(regs: jnp.ndarray, items: jnp.ndarray) -> jnp.ndarray:
+def hll_update_batch(regs: jnp.ndarray, items: jnp.ndarray,
+                     valid_mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Vectorized in-mapper combine of a batch of ids into the registers.
+
+    ``valid_mask`` marks the items that count (ragged/padded batches);
+    invalid items contribute rank 0 — a no-op under the register max.
+    """
     p = int(math.log2(regs.shape[-1]))
     suffix_bits = 32 - p
     h = _uhash(items, 7)
     idx = (h >> suffix_bits).astype(jnp.int32)
     suffix = h & jnp.uint32((1 << suffix_bits) - 1)
     r = _rho(suffix, suffix_bits)
+    if valid_mask is not None:
+        r = jnp.where(jnp.asarray(valid_mask, jnp.bool_), r, jnp.uint8(0))
     return regs.at[idx].max(r)
 
 # ---------------------------------------------------------------------------

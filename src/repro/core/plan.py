@@ -61,7 +61,8 @@ def _semiring_lowering(semiring: str) -> KernelLowering:
     """
 
     def lower(values: Pytree, seg_ids: jnp.ndarray, num_segments: int, *,
-              block_n: int = 512, interpret: Optional[bool] = None) -> Pytree:
+              block_n: int = 512, valid_mask: Optional[jnp.ndarray] = None,
+              interpret: Optional[bool] = None) -> Pytree:
         from ..kernels.segment_fold import segment_fold_pallas
 
         def per_leaf(v):
@@ -69,6 +70,7 @@ def _semiring_lowering(semiring: str) -> KernelLowering:
             flat = v.reshape((v.shape[0], -1))
             out = segment_fold_pallas(flat, seg_ids, num_segments,
                                       semiring=semiring, block_n=block_n,
+                                      valid_mask=valid_mask,
                                       interpret=interpret)
             return out.reshape((num_segments,) + v.shape[1:])
 
@@ -84,14 +86,15 @@ def _mean_pair_lowering() -> KernelLowering:
     leafwise = _semiring_lowering("sum").fn
 
     def lower(values: Pytree, seg_ids: jnp.ndarray, num_segments: int, *,
-              block_n: int = 512, interpret: Optional[bool] = None) -> Pytree:
+              block_n: int = 512, valid_mask: Optional[jnp.ndarray] = None,
+              interpret: Optional[bool] = None) -> Pytree:
         from ..kernels.segment_fold import segment_fold_pallas
 
         s, c = values
         s_leaves = jax.tree_util.tree_leaves(s)
         if len(s_leaves) != 1 or jnp.ndim(c) != 1:
             return leafwise(values, seg_ids, num_segments, block_n=block_n,
-                            interpret=interpret)
+                            valid_mask=valid_mask, interpret=interpret)
         (sv,) = s_leaves
         sv = jnp.asarray(sv)
         flat = jnp.concatenate(
@@ -99,6 +102,7 @@ def _mean_pair_lowering() -> KernelLowering:
              jnp.asarray(c).reshape((-1, 1)).astype(jnp.float32)], axis=1)
         out = segment_fold_pallas(flat, seg_ids, num_segments,
                                   semiring="sum", block_n=block_n,
+                                  valid_mask=valid_mask,
                                   interpret=interpret)
         sums = out[:, :-1].reshape((num_segments,) + sv.shape[1:])
         if jnp.issubdtype(sv.dtype, jnp.integer):
@@ -147,7 +151,12 @@ class TierPlan:
 
 @dataclasses.dataclass(frozen=True)
 class Plan:
-    """A lowered fold: local tier(s) followed by collective tier(s)."""
+    """A lowered fold: local tier(s) followed by collective tier(s).
+
+    ``num_valid`` is the statically-known count of rows a ``valid_mask``
+    keeps (None when no mask was given or the mask is abstract/traced) —
+    ragged folds shuffle only valid rows, and the byte model reflects that.
+    """
 
     monoid: Monoid
     tiers: Tuple[TierPlan, ...]
@@ -155,6 +164,7 @@ class Plan:
     num_segments: Optional[int]
     value_bytes: int          # bytes of ONE lifted monoid value
     out_bytes: int            # bytes of the final local result (table/value)
+    num_valid: Optional[int] = None
 
     @property
     def local_tier(self) -> TierPlan:
@@ -217,6 +227,51 @@ def _lifted_value_shape(m: Monoid, values: Pytree, lifted: bool,
     return one
 
 
+def _static_valid_count(valid_mask) -> Optional[int]:
+    """Number of True rows when the mask is concrete; None when abstract
+    (ShapeDtypeStruct at plan time, or a tracer inside jit)."""
+    if valid_mask is None or isinstance(valid_mask, jax.ShapeDtypeStruct):
+        return None
+    try:
+        return int(jnp.sum(jnp.asarray(valid_mask, jnp.bool_)))
+    except (jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError, TypeError):
+        return None
+
+
+def _check_valid_mask(valid_mask, n: int) -> None:
+    shape = getattr(valid_mask, "shape", None)
+    if shape is not None and tuple(shape) != (n,):
+        raise ValueError(
+            f"valid_mask must be one flag per record, shape ({n},); got "
+            f"shape {tuple(shape)}")
+
+
+def _mask_rows_to_identity(m: Monoid, values: Pytree,
+                           valid_mask: jnp.ndarray) -> Pytree:
+    """Replace invalid rows of a LIFTED batch with the monoid identity, so
+    they are no-ops under combine — the generic ragged lowering that works
+    for ANY monoid (scan/tree tiers)."""
+    mask = jnp.asarray(valid_mask, jnp.bool_)
+    one = m.identity_like(jax.tree_util.tree_map(lambda v: v[0], values))
+    return jax.tree_util.tree_map(
+        lambda v, i: jnp.where(
+            mask.reshape(mask.shape + (1,) * (jnp.ndim(v) - 1)), v,
+            jnp.asarray(i, jnp.asarray(v).dtype)),
+        values, one)
+
+
+def _mask_segment_ids(segment_ids: jnp.ndarray, valid_mask,
+                      num_segments: int) -> jnp.ndarray:
+    """Route invalid rows to the out-of-range id ``num_segments`` — dropped
+    by XLA scatters (jax.ops.segment_*) and by the Pallas kernel's one-hot,
+    exactly like its block padding."""
+    if valid_mask is None:
+        return segment_ids
+    return jnp.where(jnp.asarray(valid_mask, jnp.bool_), segment_ids,
+                     num_segments)
+
+
 def _kernel_compatible(m: Monoid, value_shape: Pytree) -> bool:
     if m.kernel_lowering() is None:
         return False
@@ -252,6 +307,7 @@ def _kernel_exact(value_shape: Pytree, num_records: int) -> bool:
 
 def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
               num_segments: Optional[int] = None,
+              valid_mask=None,
               mesh_axes: Optional[Sequence[Any]] = None,
               layout: str = "auto", lifted: bool = True,
               map_fn: Optional[Callable] = None,
@@ -265,6 +321,12 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
     combiner: raw pairs cross the wire, receivers fold) purely for byte
     accounting; :func:`execute_fold` refuses to run such plans.
 
+    ``valid_mask`` (one bool per record) makes the fold ragged: invalid rows
+    contribute the monoid identity on every tier, and — when the mask is
+    concrete — only valid rows count toward the shuffle byte model
+    (``Plan.num_valid``).  This is how padded batches and packed sequences
+    fold without materializing a rectangle of real records.
+
     Axis sizes for collective byte prediction come from ``mesh`` or
     ``axis_sizes``; unknown sizes predict 0 wire bytes.
     """
@@ -272,12 +334,20 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
         raise ValueError(f"layout must be one of {LAYOUTS}")
     keyed = segment_ids is not None
     if keyed and num_segments is None:
-        raise ValueError("keyed folds require num_segments")
+        raise ValueError(
+            "segment_ids= was passed without num_segments=: a keyed fold "
+            "returns a static (num_segments, ...) table, so pass the key-"
+            "space size as num_segments=")
 
     n = _leading_dim(values)
+    if valid_mask is not None:
+        _check_valid_mask(valid_mask, n)
+    num_valid = _static_valid_count(valid_mask)
+    n_model = n if num_valid is None else num_valid   # rows in the byte model
     value_shape = _lifted_value_shape(m, values, lifted, map_fn)
     vbytes = tree_bytes(value_shape)
     out_bytes = (num_segments * vbytes) if keyed else vbytes
+    masked = " +mask" if valid_mask is not None else ""
 
     # -- local tier ---------------------------------------------------------
     if keyed:
@@ -287,7 +357,7 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
         kind = layout
         if layout == "auto":
             if (_kernel_compatible(m, value_shape)
-                    and _kernel_exact(value_shape, n)
+                    and _kernel_exact(value_shape, n_model)
                     and jax.default_backend() == "tpu"):
                 kind = "kernel"
             elif m.name in _SEGMENT_OPS:
@@ -301,28 +371,34 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
             low = m.kernel_lowering()
             local = TierPlan("kernel",
                              f"pallas segment_fold[{low.semiring}] "
-                             f"block_n={block_n}", out_bytes)
+                             f"block_n={block_n}{masked}", out_bytes)
         elif kind == "segment":
             op = _SEGMENT_OPS.get(m.name)
             if op is None:
                 raise ValueError(
                     f"monoid {m.name!r} has no XLA segment primitive")
-            local = TierPlan("segment_ops", f"jax.ops.{op.__name__}",
+            local = TierPlan("segment_ops", f"jax.ops.{op.__name__}{masked}",
                              out_bytes)
         else:
-            local = TierPlan("scan", "serial scan (any monoid, Alg 4)",
+            local = TierPlan("scan",
+                             f"serial scan (any monoid, Alg 4){masked}",
                              out_bytes)
     else:
         kind = layout
         if layout in ("kernel", "segment"):
-            raise ValueError(f"layout={layout!r} requires segment_ids")
+            raise ValueError(
+                f"layout={layout!r} lowers a KEYED fold but no segment_ids= "
+                "were given: pass segment_ids= (one key per record) and "
+                "num_segments=, or use layout='tree'/'scan' for a flat fold")
         if layout == "auto":
             kind = "scan" if map_fn is not None else "tree"
         if kind == "tree":
-            local = TierPlan("tree", "log-depth tree fold (Alg 3 combiner)",
+            local = TierPlan("tree",
+                             f"log-depth tree fold (Alg 3 combiner){masked}",
                              out_bytes)
         else:
-            local = TierPlan("scan", "in-mapper scan (Alg 4, O(1) live)",
+            local = TierPlan("scan",
+                             f"in-mapper scan (Alg 4, O(1) live){masked}",
                              out_bytes)
 
     # -- collective tiers: ICI first, then DCN ------------------------------
@@ -333,8 +409,8 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
     algo = collective_algorithm(m)
     tiers = []
     if not pre_combine:
-        # Algorithm 1: every lifted pair crosses the wire un-combined.
-        pair_bytes = n * vbytes
+        # Algorithm 1: every VALID lifted pair crosses the wire un-combined.
+        pair_bytes = n_model * vbytes
         wire = sum(collective_wire_bytes(pair_bytes, sizes.get(ax, 1),
                                          "gather") for ax in (mesh_axes or ()))
         tiers.append(TierPlan("gather_pairs",
@@ -356,7 +432,7 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
                         out_bytes, wire))
     return Plan(monoid=m, tiers=tuple(tiers), num_records=n,
                 num_segments=num_segments, value_bytes=vbytes,
-                out_bytes=out_bytes)
+                out_bytes=out_bytes, num_valid=num_valid)
 
 
 # ---------------------------------------------------------------------------
@@ -372,31 +448,46 @@ def _seg_add_init(m: Monoid, folded: Pytree, init: Optional[Pytree]) -> Pytree:
 def _segment_fold_generic(m: Monoid, values: Pytree, segment_ids: jnp.ndarray,
                           num_segments: int, init: Optional[Pytree] = None, *,
                           lifted: bool = True,
-                          map_fn: Optional[Callable] = None) -> Pytree:
+                          map_fn: Optional[Callable] = None,
+                          valid_mask: Optional[jnp.ndarray] = None) -> Pytree:
     """O(N) serial scan — works for ANY monoid (the associative array of
     Alg 4).  With ``lifted=False``/``map_fn`` the lift runs inside the scan
     step, so per-record values are never materialized (true in-mapper
-    combining)."""
+    combining).  Rows where ``valid_mask`` is False contribute the monoid
+    identity — combine with it is a no-op, so the ragged fold equals the
+    fold over only the valid rows for ANY monoid."""
     def prep(x):
         if map_fn is not None:
             return m.lift(map_fn(x))
         return x if lifted else m.lift(x)
 
+    first = jax.tree_util.tree_map(lambda v: v[0], values)
+    one = m.identity_like(prep(first))
     if init is None:
-        first = jax.tree_util.tree_map(lambda v: v[0], values)
-        one = m.identity_like(prep(first))
         init = jax.tree_util.tree_map(
             lambda l: jnp.broadcast_to(l, (num_segments,) + l.shape), one)
 
+    mask = (None if valid_mask is None
+            else jnp.asarray(valid_mask, jnp.bool_))
+
     def step(acc, kv):
-        k, x = kv
-        v = prep(x)
+        if mask is None:
+            k, x = kv
+            v = prep(x)
+        else:
+            k, valid, x = kv
+            v = prep(x)
+            v = jax.tree_util.tree_map(
+                lambda l, i: jnp.where(valid, l,
+                                       jnp.asarray(i, jnp.asarray(l).dtype)),
+                v, one)
         cur = jax.tree_util.tree_map(lambda a: a[k], acc)
         new = m.combine(cur, v)
         acc = jax.tree_util.tree_map(lambda a, n_: a.at[k].set(n_), acc, new)
         return acc, None
 
-    acc, _ = jax.lax.scan(step, init, (segment_ids, values))
+    xs = (segment_ids, values) if mask is None else (segment_ids, mask, values)
+    acc, _ = jax.lax.scan(step, init, xs)
     return acc
 
 
@@ -410,8 +501,10 @@ def _materialize_lifted(m: Monoid, values: Pytree, lifted: bool,
 
 
 def _scan_fold_map(m: Monoid, values: Pytree, map_fn: Callable,
-                   axis: int) -> Pytree:
-    """Flat in-mapper fold: lift(map_fn(x)) folded in a lax.scan carry."""
+                   axis: int,
+                   valid_mask: Optional[jnp.ndarray] = None) -> Pytree:
+    """Flat in-mapper fold: lift(map_fn(x)) folded in a lax.scan carry.
+    Invalid rows fold the identity (a combine no-op)."""
     def move(x):
         return jnp.moveaxis(x, axis, 0) if axis != 0 else x
 
@@ -420,10 +513,24 @@ def _scan_fold_map(m: Monoid, values: Pytree, map_fn: Callable,
     out_shape = jax.eval_shape(lambda x: m.lift(map_fn(x)), one)
     init = m.identity_like(out_shape)
 
-    def step(acc, x):
-        return m.combine(acc, m.lift(map_fn(x))), None
+    if valid_mask is None:
+        def step(acc, x):
+            return m.combine(acc, m.lift(map_fn(x))), None
 
-    acc, _ = jax.lax.scan(step, init, values)
+        acc, _ = jax.lax.scan(step, init, values)
+        return acc
+
+    def step_masked(acc, vx):
+        valid, x = vx
+        v = m.lift(map_fn(x))
+        v = jax.tree_util.tree_map(
+            lambda l, i: jnp.where(valid, l,
+                                   jnp.asarray(i, jnp.asarray(l).dtype)),
+            v, init)
+        return m.combine(acc, v), None
+
+    acc, _ = jax.lax.scan(step_masked, init,
+                          (jnp.asarray(valid_mask, jnp.bool_), values))
     return acc
 
 
@@ -433,6 +540,7 @@ def _scan_fold_map(m: Monoid, values: Pytree, map_fn: Callable,
 
 def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
                  num_segments: Optional[int] = None,
+                 valid_mask=None,
                  mesh_axes: Optional[Sequence[Any]] = None,
                  layout: str = "auto", lifted: bool = True,
                  map_fn: Optional[Callable] = None,
@@ -450,6 +558,12 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
     mesh axes (must run inside shard_map), fast ICI axes before the slow DCN
     ``pod`` axis.
 
+    ``valid_mask`` (one bool per record) makes the fold ragged: invalid rows
+    contribute the monoid identity on every tier — the kernel and
+    segment-ops tiers route them to the out-of-range segment id (dropped by
+    the one-hot / the XLA scatter), the generic tiers fold the identity.
+    The result equals the fold over only the valid rows.
+
     layout: 'auto' picks the kernel tier on TPU when the monoid has a
     registered Pallas lowering, else segment-ops, else the generic scan;
     'kernel' / 'segment' / 'scan' / 'tree' force a tier.  ``map_fn`` maps
@@ -459,12 +573,23 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
 
     Returns the folded value — or ``(value, plan)`` with ``with_plan=True``.
     """
+    plan_mask = valid_mask
+    if valid_mask is not None and not isinstance(valid_mask,
+                                                 jax.ShapeDtypeStruct):
+        # plan from the mask's SHAPE only: counting a concrete device mask
+        # would block dispatch just for byte bookkeeping, and tier choice
+        # falls back to the conservative all-rows count.  Call plan_fold
+        # directly for the counted byte model.
+        plan_mask = jax.ShapeDtypeStruct(jnp.shape(valid_mask), jnp.bool_)
     plan = plan_fold(m, values, segment_ids=segment_ids,
-                     num_segments=num_segments, mesh_axes=mesh_axes,
+                     num_segments=num_segments, valid_mask=plan_mask,
+                     mesh_axes=mesh_axes,
                      layout=layout, lifted=lifted, map_fn=map_fn, mesh=mesh,
                      axis_sizes=axis_sizes, block_n=block_n)
     kind = plan.local_tier.kind
     keyed = segment_ids is not None
+    if valid_mask is not None and axis != 0:
+        raise ValueError("valid_mask requires the batch axis at 0")
 
     if keyed:
         if axis != 0:
@@ -473,27 +598,35 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
             mat = _materialize_lifted(m, values, lifted, map_fn)
             folded = m.kernel_lowering().fn(mat, segment_ids, num_segments,
                                             block_n=block_n,
+                                            valid_mask=valid_mask,
                                             interpret=interpret)
             out = _seg_add_init(m, folded, init)
         elif kind == "segment_ops":
             mat = _materialize_lifted(m, values, lifted, map_fn)
+            seg = _mask_segment_ids(segment_ids, valid_mask, num_segments)
             op = _SEGMENT_OPS[m.name]
             folded = jax.tree_util.tree_map(
-                lambda v: op(v, segment_ids, num_segments=num_segments), mat)
+                lambda v: op(v, seg, num_segments=num_segments), mat)
             out = _seg_add_init(m, folded, init)
         else:
             out = _segment_fold_generic(m, values, segment_ids, num_segments,
-                                        init, lifted=lifted, map_fn=map_fn)
+                                        init, lifted=lifted, map_fn=map_fn,
+                                        valid_mask=valid_mask)
     else:
         if init is not None:
             raise ValueError("init is only supported for keyed folds")
         if kind == "tree":
             mat = _materialize_lifted(m, values, lifted, map_fn)
+            if valid_mask is not None:
+                mat = _mask_rows_to_identity(m, mat, valid_mask)
             out = tree_fold(m, mat, axis=axis)
         elif map_fn is not None:
-            out = _scan_fold_map(m, values, map_fn, axis)
+            out = _scan_fold_map(m, values, map_fn, axis,
+                                 valid_mask=valid_mask)
         else:
             mat = _materialize_lifted(m, values, lifted, map_fn)
+            if valid_mask is not None:
+                mat = _mask_rows_to_identity(m, mat, valid_mask)
             out = scan_fold(m, mat, axis=axis)
 
     if mesh_axes:

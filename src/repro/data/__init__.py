@@ -1,4 +1,4 @@
 """repro.data — deterministic resumable pipeline + monoid stream statistics."""
-from .pipeline import DataConfig, Prefetcher, SyntheticCorpus
+from .pipeline import DataConfig, Prefetcher, SyntheticCorpus, packed_stats
 from .stats import (init_stats, make_stream_stats, summarize, sync_stats,
                     update_stats)

@@ -12,6 +12,12 @@ Design (DESIGN.md §3):
   (EOS-terminated docs, geometric lengths), packed to fixed seq_len. A stub
   for a real tokenized corpus; the interface (``__call__(step) -> batch``) is
   what the trainer depends on.
+* **Ragged batches** — with ``ragged=True`` a row ends at its last complete
+  (EOS-terminated) document; the tail is padding carried in a ``valid_mask``
+  instead of being filled with a truncated document.  Every consumer folds
+  through the planner's ``valid_mask=`` path (:func:`packed_stats`,
+  ``data/stats.py``), so nothing downstream re-materializes a rectangle of
+  real tokens.
 * **Prefetch** — a depth-bounded background thread (double buffering).
 """
 from __future__ import annotations
@@ -24,6 +30,9 @@ from typing import Any, Dict, Iterator, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import monoids
+from ..core.plan import execute_fold
+
 
 @dataclasses.dataclass(frozen=True)
 class DataConfig:
@@ -35,6 +44,7 @@ class DataConfig:
     mean_doc_len: int = 256
     eos_id: int = 0
     pad_id: int = 0
+    ragged: bool = False   # emit valid_mask; keep only whole packed docs
 
 
 class SyntheticCorpus:
@@ -68,14 +78,55 @@ class SyntheticCorpus:
         # document structure: EOS with prob 1/mean_doc_len (geometric docs)
         eos_mask = rng.random((B, S)) < (1.0 / cfg.mean_doc_len)
         toks = np.where(eos_mask, cfg.eos_id, toks)
+        batch: Dict[str, Any] = {}
+        if cfg.ragged:
+            # keep only whole documents: a row ends at its LAST EOS and the
+            # tail (an incomplete doc) becomes padding under valid_mask —
+            # consumers fold through the planner's mask path instead of this
+            # pipeline inventing a truncated document to fill the rectangle
+            is_eos = toks == cfg.eos_id
+            has = is_eos.any(axis=1)
+            last = np.where(has, (S - 1) - np.argmax(is_eos[:, ::-1], axis=1),
+                            S - 1)   # no EOS: the whole row is one open doc
+            valid = np.arange(S)[None, :] <= last[:, None]
+            toks = np.where(valid, toks, cfg.pad_id)
+            batch["valid_mask"] = jnp.asarray(valid)
         labels = np.concatenate([toks[:, 1:], np.full((B, 1), -1, np.int32)],
                                 axis=1)
-        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+        if cfg.ragged:
+            # no loss on predicting padding
+            next_valid = np.concatenate(
+                [valid[:, 1:], np.zeros((B, 1), bool)], axis=1)
+            labels = np.where(next_valid, labels, -1)
+        batch["tokens"] = jnp.asarray(toks)
+        batch["labels"] = jnp.asarray(labels)
         if self.context_shape is not None:
             ctx = rng.standard_normal((B,) + tuple(self.context_shape),
                                       dtype=np.float32)
             batch["context"] = jnp.asarray(ctx, self.context_dtype)
         return batch
+
+
+def packed_stats(tokens: jnp.ndarray, valid_mask: jnp.ndarray, *,
+                 eos_id: int = 0) -> Dict[str, jnp.ndarray]:
+    """Per-row packed-sequence stats as ONE masked keyed fold.
+
+    tokens/valid_mask: (B, S).  Returns ``{"tokens": (B,), "docs": (B,)}`` —
+    real-token count and completed-document (EOS) count per row.  Both
+    columns ride a single planner-lowered keyed fold (segment id = row,
+    ``valid_mask`` = the flattened padding mask): the ragged batch is never
+    densified, padding rows fold the identity.
+    """
+    B, S = tokens.shape
+    flat = tokens.reshape(-1)
+    rows = jnp.stack([jnp.ones_like(flat, jnp.float32),
+                      (flat == eos_id).astype(jnp.float32)], axis=-1)
+    seg = jnp.repeat(jnp.arange(B, dtype=jnp.int32), S)
+    out = execute_fold(monoids.sum_, rows, segment_ids=seg, num_segments=B,
+                       valid_mask=jnp.asarray(valid_mask,
+                                              jnp.bool_).reshape(-1))
+    return {"tokens": out[:, 0].astype(jnp.int32),
+            "docs": out[:, 1].astype(jnp.int32)}
 
 
 class Prefetcher:

@@ -54,35 +54,53 @@ _STATS_COMBINE = Monoid(
 )
 
 
-def _batch_value(state: Dict[str, Any], tokens: jnp.ndarray) -> Dict[str, Any]:
+def _batch_value(state: Dict[str, Any], tokens: jnp.ndarray,
+                 valid_mask: jnp.ndarray | None = None) -> Dict[str, Any]:
     """Vector-lift a whole token batch into ONE stats monoid value.
 
     This is the mapper side done in bulk: shapes are taken from ``state`` so
     the value matches whatever widths ``make_stream_stats`` chose.
+    ``valid_mask`` (same shape as ``tokens``) is the ragged path: padding
+    tokens contribute the identity to every component — the same mask
+    convention the execution planner's ``valid_mask=`` uses.
     """
     flat = tokens.reshape(-1)
-    cms = monoids.cms_update_batch(jnp.zeros_like(state["cms"]), flat)
-    hll = monoids.hll_update_batch(jnp.zeros_like(state["hll"]), flat)
+    mask = None if valid_mask is None else jnp.asarray(valid_mask,
+                                                       jnp.bool_).reshape(-1)
+    weights = None if mask is None else mask.astype(jnp.int32)
+    cms = monoids.cms_update_batch(jnp.zeros_like(state["cms"]), flat,
+                                   weights=weights)
+    hll = monoids.hll_update_batch(jnp.zeros_like(state["hll"]), flat,
+                                   valid_mask=mask)
     bloom = jnp.zeros_like(state["bloom"])
+    hit = (jnp.ones_like(flat, bloom.dtype) if mask is None
+           else mask.astype(bloom.dtype))
     for s in range(4):
         idx = monoids._uhash(flat, s) % bloom.shape[-1]
-        bloom = bloom.at[idx].set(1)
-    count = jnp.asarray(flat.shape[0], state["count"].dtype)
+        bloom = bloom.at[idx].max(hit)    # masked-out tokens set no bits
+    count = (jnp.asarray(flat.shape[0], state["count"].dtype) if mask is None
+             else jnp.sum(mask).astype(state["count"].dtype))
     return {"cms": cms, "hll": hll, "bloom": bloom, "count": count}
 
 
 @jax.jit
-def _fold_tokens(state, tokens):
+def _fold_tokens(state, tokens, valid_mask=None):
     """In-mapper combine of one token batch into the stats state, lowered
     through the execution planner (tree fold over [state, batch_value])."""
-    bval = _batch_value(state, tokens)
+    bval = _batch_value(state, tokens, valid_mask)
     stacked = jax.tree_util.tree_map(lambda a, b: jnp.stack([a, b]),
                                      state, bval)
     return execute_fold(_STATS_COMBINE, stacked)
 
 
-def update_stats(state: Dict[str, Any], tokens: jnp.ndarray) -> Dict[str, Any]:
-    return _fold_tokens(state, tokens)
+def update_stats(state: Dict[str, Any], tokens: jnp.ndarray,
+                 valid_mask: jnp.ndarray | None = None) -> Dict[str, Any]:
+    """Fold one (possibly ragged) token batch into the stats state.
+
+    With ``valid_mask`` only True positions count — the data pipeline's
+    packed/padded batches feed straight in, no rectangular re-batching.
+    """
+    return _fold_tokens(state, tokens, valid_mask)
 
 
 def sync_stats(m: Monoid, state: Dict[str, Any],

@@ -86,6 +86,7 @@ def _finish_dtype(out: jnp.ndarray, dtype, semiring: str) -> jnp.ndarray:
 def segment_fold_pallas(values: jnp.ndarray, seg_ids: jnp.ndarray,
                         num_segments: int, *, block_n: int = 512,
                         semiring: str = "sum", with_count: bool = False,
+                        valid_mask: jnp.ndarray | None = None,
                         interpret: bool | None = None):
     """values: (N, D); seg_ids: (N,) int32 in [0, num_segments).
 
@@ -94,11 +95,19 @@ def segment_fold_pallas(values: jnp.ndarray, seg_ids: jnp.ndarray,
     with the out-of-range segment id ``num_segments``, which folds into no
     real segment — the semiring identity contributes nothing.
 
+    ``valid_mask`` (N,) bool makes the fold ragged: invalid rows are routed
+    to the same out-of-range segment id the padding uses, so they contribute
+    the semiring identity — no rectangular batch required, and the kernel
+    body is untouched (one mask per grid step, zero extra FLOPs on the MXU).
+
     ``interpret=None`` resolves via :func:`repro.kernels.ops._default_interpret`
     (TPU detection, overridable with ``REPRO_INTERPRET=0/1``).
     """
     if semiring not in SEMIRINGS:
         raise ValueError(f"unknown semiring {semiring!r}; one of {SEMIRINGS}")
+    if valid_mask is not None:
+        seg_ids = jnp.where(jnp.asarray(valid_mask, jnp.bool_),
+                            seg_ids, num_segments)
     if interpret is None:
         from .ops import _default_interpret
         interpret = _default_interpret()

@@ -1,7 +1,19 @@
-"""Serving driver: batched prefill + decode with KV caches on the host mesh.
+"""Batched serving driver: the decode step as a keyed MapReduce pass.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --batch 4 \
-      --prompt-len 32 --gen 32 [--full]
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
+      --requests 8 --max-batch 4 --min-prompt 8 --max-prompt 32 --gen 16
+
+Concurrent requests are batched by :class:`repro.runtime.RequestBatcher`
+(max-batch-size / max-wait policies) and decoded together against one KV
+cache.  The serving-side aggregation — per-request logprob sums, generated
+token counts, and the stop-condition reduction — is ONE planner-lowered
+keyed fold per decode step (``request slot == segment id``), not a
+per-request Python loop: the same way the train step amortizes the shuffle
+with a combiner, the serve step amortizes both the kernel launch and the
+aggregation across the whole batch.  Requests have different prompt lengths
+and different generation budgets, so every fold runs ragged: a
+``valid_mask`` marks the rows (slots) that are actively generating this
+step, and masked rows contribute the monoid identity (core/plan.py).
 
 The production-mesh serving step (256/512 chips, sequence-sharded KV for
 long contexts) is the same `make_decode_step` exercised by the dry-run;
@@ -10,61 +22,252 @@ this driver runs it for real at host scale with smoke configs.
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import functools
 import time
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import ShapeCell, context_spec, get_config
+from ..core import monoids
+from ..core.plan import Plan, execute_fold, plan_fold
 from ..models import init_cache, init_params
-from ..optim import OptConfig  # noqa: F401  (parity of public surface)
+from ..runtime.batcher import DecodeBatch, RequestBatcher
 from .mesh import make_host_mesh
-from .steps import make_decode_step
+from .steps import BuiltStep, make_decode_step
+
+# columns of the per-request metrics table — ONE additive fold carries all
+# three: sum of sampled-token logprobs, count of generated tokens, and the
+# stop condition as a summed indicator (eos_hits > 0 <=> OR of eos hits)
+METRIC_COLS = ("logprob_sum", "tokens", "eos_hits")
+
+
+def decode_metrics_init(num_slots: int) -> jnp.ndarray:
+    """The identity table: (num_slots, len(METRIC_COLS)) float32 zeros."""
+    return jnp.zeros((num_slots, len(METRIC_COLS)), jnp.float32)
+
+
+def decode_metrics_plan(batch_rows: int, num_slots: int) -> Plan:
+    """The plan of ONE decode step's per-request aggregation (no FLOPs).
+
+    This is the contract the serving path is built on: B concurrent
+    requests aggregate through a single keyed, masked fold — inspect the
+    plan to see one local tier, not B of them.
+    """
+    return plan_fold(
+        monoids.sum_,
+        jax.ShapeDtypeStruct((batch_rows, len(METRIC_COLS)), jnp.float32),
+        segment_ids=jax.ShapeDtypeStruct((batch_rows,), jnp.int32),
+        num_segments=num_slots,
+        valid_mask=jax.ShapeDtypeStruct((batch_rows,), jnp.bool_))
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots", "eos_id"))
+def decode_metrics_step(table: jnp.ndarray, logits: jnp.ndarray,
+                        sampled: jnp.ndarray, slot_ids: jnp.ndarray,
+                        active: jnp.ndarray, *, num_slots: int,
+                        eos_id: int) -> jnp.ndarray:
+    """Fold one decode step's per-request aggregates into the running table.
+
+    logits: (B, V) last-position logits; sampled: (B,) sampled token ids;
+    slot_ids: (B,) request slot per row (segment ids); active: (B,) bool —
+    rows still generating this step.  The whole batch reduces in ONE
+    planner-lowered keyed fold; inactive/empty slots are masked to the
+    identity, and the running table rides in as ``init`` (the fold across
+    steps is the same monoid, re-bracketed — the paper's point).
+    """
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok_logp = jnp.take_along_axis(logp, sampled[:, None], axis=-1)[:, 0]
+    rows = jnp.stack(
+        [tok_logp, jnp.ones_like(tok_logp),
+         (sampled == eos_id).astype(jnp.float32)], axis=-1)
+    return execute_fold(monoids.sum_, rows, segment_ids=slot_ids,
+                        num_segments=num_slots, valid_mask=active,
+                        init=table)
+
+
+def extract_metrics(table: jnp.ndarray) -> Dict[str, np.ndarray]:
+    """Read the metrics table out into per-slot host arrays."""
+    t = np.asarray(table)
+    return {
+        "logprob_sum": t[:, 0],
+        "tokens": t[:, 1].astype(np.int64),
+        "stopped": t[:, 2] > 0,       # summed eos indicator == OR
+    }
+
+
+@dataclasses.dataclass
+class BatchResult:
+    """Outcome of decoding one flushed batch."""
+
+    batch: DecodeBatch
+    tokens: np.ndarray            # (num_slots, max_new) generated ids (0-padded)
+    metrics: Dict[str, np.ndarray]
+    decode_steps: int
+    prefill_s: float
+    decode_s: float
+
+
+def run_batched_decode(built: BuiltStep, params, cache, batch: DecodeBatch, *,
+                       eos_id: int = 0, pad_id: int = 0,
+                       temperature: float = 0.0,
+                       key: Optional[jax.Array] = None,
+                       max_steps: Optional[int] = None) -> BatchResult:
+    """Decode one ragged batch to completion with per-step keyed-fold metrics.
+
+    The loop advances ALL slots one position per step.  A slot is forced
+    from its prompt while the position is inside it, then samples until it
+    hits ``eos_id``, exhausts its ``max_new_tokens`` budget, or the batch
+    hits ``max_steps``.  Per-step aggregation is one masked keyed fold —
+    see :func:`decode_metrics_step`.
+    """
+    toks, lengths, _ = batch.pack(pad_id=pad_id)
+    S, L = toks.shape
+    slot_ids = jnp.asarray(batch.segment_ids)
+    lengths_j = jnp.asarray(np.maximum(lengths, 1))   # empty slots idle at 1
+    max_new = jnp.asarray(batch.max_new())
+    budget = int(batch.max_new().max(initial=0))
+    total_steps = (L - 1) + budget if max_steps is None \
+        else min((L - 1) + budget, max_steps)
+
+    table = decode_metrics_init(S)
+    gen = np.zeros((S, max(budget, 1)), np.int64)
+    n_new = jnp.zeros((S,), jnp.int32)
+    done = jnp.asarray(~batch.slot_valid)             # empty slots start done
+    toks_j = jnp.asarray(toks)
+    cur = toks_j[:, 0:1]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    t0 = time.perf_counter()
+    prefill_s = None
+    decode_steps = 0
+    for p in range(total_steps):
+        logits, cache = built.fn(params, cache, cur)
+        last = logits[:, -1]
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            sampled = jax.random.categorical(sub, last / temperature, axis=-1)
+        else:
+            sampled = jnp.argmax(last, axis=-1)
+        sampled = sampled.astype(jnp.int32)
+        in_prompt = (p + 1) < lengths_j               # next pos still forced
+        emitting = (~in_prompt) & (~done) & (n_new < max_new)
+        # ONE keyed fold for the whole batch: logprob sums + token counts +
+        # stop hits, ragged over the active slots
+        table = decode_metrics_step(table, last, sampled, slot_ids, emitting,
+                                    num_slots=S, eos_id=eos_id)
+        n_next = n_new + emitting.astype(jnp.int32)
+        done = done | (emitting & (sampled == eos_id)) | (n_next >= max_new)
+        # one host sync per step for the token buffer + stop poll
+        emit_np, idx_np, samp_np, all_done = jax.device_get(
+            (emitting, n_new, sampled, jnp.all(done)))
+        if emit_np.any():
+            if prefill_s is None:     # first emission anywhere: decode begins
+                prefill_s = time.perf_counter() - t0
+            gen[emit_np, idx_np[emit_np]] = samp_np[emit_np]
+            decode_steps += 1
+        n_new = n_next
+        forced = toks_j[:, min(p + 1, L - 1)]
+        cur = jnp.where(in_prompt, forced, sampled)[:, None]
+        if bool(all_done):
+            break
+    total_s = time.perf_counter() - t0
+    if prefill_s is None:
+        prefill_s = total_s
+    return BatchResult(batch=batch, tokens=gen, metrics=extract_metrics(table),
+                       decode_steps=decode_steps, prefill_s=prefill_s,
+                       decode_s=max(total_s - prefill_s, 1e-9))
+
+
+def build_serve_step(arch: str, *, max_batch: int, max_seq: int,
+                     model_parallel: int = 1, full: bool = False,
+                     seed: int = 0):
+    """(cfg, built, params, make_cache): everything one serving loop needs.
+
+    ``make_cache()`` returns a fresh sharded KV cache — one per flushed
+    batch; params load once and are reused across batches.
+    """
+    cfg = get_config(arch, smoke=not full)
+    mesh = make_host_mesh(model=model_parallel)
+    shape = ShapeCell("serve", "decode", max_seq, max_batch)
+    built = make_decode_step(cfg, mesh, shape, donate=False)
+    key = jax.random.PRNGKey(seed)
+    params, _ = init_params(cfg, key)
+    params = jax.device_put(params, built.in_shardings[0])
+    spec = context_spec(cfg, max_batch)
+    context = None if spec is None else jax.random.normal(key, spec.shape,
+                                                          cfg.dtype)
+
+    def make_cache():
+        cache = init_cache(params, cfg, max_batch, max_seq, context=context)
+        return jax.device_put(cache, built.in_shardings[1])
+
+    return cfg, built, params, make_cache
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-wait-ms", type=float, default=0.0)
+    ap.add_argument("--min-prompt", type=int, default=8)
+    ap.add_argument("--max-prompt", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=not args.full)
-    mesh = make_host_mesh(model=args.model_parallel)
-    B = args.batch
-    max_seq = args.prompt_len + args.gen
-    shape = ShapeCell("serve", "decode", max_seq, B)
-    built = make_decode_step(cfg, mesh, shape, donate=False)
+    cfg, built, params, make_cache = build_serve_step(
+        args.arch, max_batch=args.max_batch,
+        max_seq=args.max_prompt + args.gen,
+        model_parallel=args.model_parallel, full=args.full)
 
-    key = jax.random.PRNGKey(0)
-    params, _ = init_params(cfg, key)
-    params = jax.device_put(params, built.in_shardings[0])
-    spec = context_spec(cfg, B)
-    context = None if spec is None else jax.random.normal(key, spec.shape, cfg.dtype)
-    cache = init_cache(params, cfg, B, max_seq, context=context)
-    cache = jax.device_put(cache, built.in_shardings[1])
+    rng = np.random.default_rng(0)
+    batcher = RequestBatcher(max_batch_size=args.max_batch,
+                             max_wait_s=args.max_wait_ms / 1e3)
+    for _ in range(args.requests):
+        plen = int(rng.integers(args.min_prompt, args.max_prompt + 1))
+        prompt = rng.integers(1, cfg.vocab_size, plen).tolist()
+        batcher.submit(prompt, max_new_tokens=args.gen)
 
-    prompt = jax.random.randint(key, (B, args.prompt_len), 1, cfg.vocab_size)
+    plan = decode_metrics_plan(args.max_batch, args.max_batch)
+    print(f"arch={cfg.name} requests={args.requests} "
+          f"max_batch={args.max_batch} gen<={args.gen}")
+    print(f"per-step aggregation plan: {plan.describe()}")
+
+    key = jax.random.PRNGKey(1)
+    served = new_tokens = 0
     t0 = time.perf_counter()
-    for i in range(args.prompt_len):
-        logits, cache = built.fn(params, cache, prompt[:, i:i + 1])
-    prefill_s = time.perf_counter() - t0
-
-    tok = jnp.argmax(logits[:, -1], -1, keepdims=True).astype(jnp.int32)
-    out = [tok]
-    t0 = time.perf_counter()
-    for _ in range(args.gen - 1):
-        logits, cache = built.fn(params, cache, out[-1])
+    while len(batcher):
+        if not batcher.ready():
+            # trailing partial batch: honor the max-wait latency bound
+            # before flushing it (full batches flush immediately)
+            time.sleep(max(args.max_wait_ms, 0.0) / 1e3)
+        batch = batcher.flush(force=True)
         key, sub = jax.random.split(key)
-        out.append(jax.random.categorical(sub, logits[:, -1], axis=-1)
-                   [:, None].astype(jnp.int32))
-    decode_s = time.perf_counter() - t0
-    print(f"arch={cfg.name} batch={B} prefill={args.prompt_len} gen={args.gen}")
-    print(f"prefill {B*args.prompt_len/prefill_s:.0f} tok/s | "
-          f"decode {B*(args.gen-1)/max(decode_s,1e-9):.0f} tok/s")
+        res = run_batched_decode(built, params, make_cache(), batch,
+                                 eos_id=0, temperature=args.temperature,
+                                 key=sub)
+        served += len(batch)
+        toks = res.metrics["tokens"][batch.slot_valid]
+        new_tokens += int(toks.sum())
+        print(f"  batch of {len(batch)}: prompts="
+              f"{batch.lengths()[batch.slot_valid].tolist()} "
+              f"generated={toks.tolist()} "
+              f"logprob_sum={np.round(res.metrics['logprob_sum'][batch.slot_valid], 2).tolist()} "
+              f"({res.decode_steps} decode steps, "
+              f"{int(toks.sum()) / res.decode_s:.0f} tok/s)")
+    wall = time.perf_counter() - t0
+    st = batcher.stats
+    print(f"served {served} requests, {new_tokens} tokens in {wall:.2f}s "
+          f"({new_tokens / wall:.0f} tok/s) | batches={st.flushed_batches} "
+          f"fill={st.fill_rate(args.max_batch):.2f}")
     return 0
 
 

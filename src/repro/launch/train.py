@@ -39,6 +39,7 @@ class TrainerConfig:
     seq_len: int = 128
     seed: int = 0
     microbatches: int = 1
+    ragged: bool = False   # corpus emits valid_mask; stats fold only real tokens
     moe_impl: str = "replicated"
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 10
@@ -67,7 +68,8 @@ def train(tc: TrainerConfig, *, preemption: Optional[PreemptionHandler] = None
     ctx_spec = context_spec(cfg, tc.global_batch)
     corpus = SyntheticCorpus(
         DataConfig(vocab_size=cfg.vocab_size, seq_len=tc.seq_len,
-                   global_batch=tc.global_batch, seed=tc.seed),
+                   global_batch=tc.global_batch, seed=tc.seed,
+                   ragged=tc.ragged),
         context_shape=None if ctx_spec is None else ctx_spec.shape[1:])
 
     # metrics stream: Sum-monoid accumulator across steps (in-mapper
@@ -95,8 +97,13 @@ def train(tc: TrainerConfig, *, preemption: Optional[PreemptionHandler] = None
     t_last = time.time()
     for step in range(start_step, tc.steps):
         batch = corpus(step)
+        # ragged corpora carry a valid_mask: the jitted step's in_shardings
+        # cover the model inputs only, and the stream stats fold it through
+        # the planner's mask path (padding tokens count nothing)
+        mask = batch.pop("valid_mask", None)
         params, opt_state, metrics = built.fn(params, opt_state, batch)
-        stream_stats = update_stats(stream_stats, batch["tokens"])
+        stream_stats = update_stats(stream_stats, batch["tokens"],
+                                    valid_mask=mask)
         metrics_acc = metrics if metrics_acc is None else \
             msum.combine(metrics_acc, metrics)
         if (step + 1) % tc.log_every == 0 or step + 1 == tc.steps:
@@ -139,13 +146,15 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ragged", action="store_true",
+                    help="ragged corpus: whole docs + valid_mask, masked stats")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=10)
     args = ap.parse_args(argv)
     tc = TrainerConfig(arch=args.arch, smoke=not args.full, steps=args.steps,
                        global_batch=args.batch, seq_len=args.seq,
-                       microbatches=args.microbatches,
+                       microbatches=args.microbatches, ragged=args.ragged,
                        model_parallel=args.model_parallel,
                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
     handler = PreemptionHandler()

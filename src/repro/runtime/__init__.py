@@ -1,4 +1,6 @@
-"""repro.runtime — fault tolerance: preemption, elastic re-mesh, stragglers."""
+"""repro.runtime — serving batcher + fault tolerance (preemption, elastic
+re-mesh, stragglers)."""
+from .batcher import BatcherStats, DecodeBatch, Request, RequestBatcher
 from .fault_tolerance import (ElasticController, MeshPlan, PreemptionHandler,
                               StragglerMonitor, StragglerReport,
                               checkpoint_interval, plan_remesh)

@@ -1,9 +1,11 @@
-"""Data pipeline: determinism, host sharding, resume, prefetch, stream stats."""
+"""Data pipeline: determinism, host sharding, resume, prefetch, stream stats,
+and the ragged (valid_mask) path for packed sequences."""
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data import (DataConfig, Prefetcher, SyntheticCorpus, init_stats,
-                        make_stream_stats, summarize, update_stats)
+                        make_stream_stats, packed_stats, summarize,
+                        update_stats)
 from repro.core import monoids
 
 
@@ -74,6 +76,56 @@ def test_stream_stats_monoid():
     top = np.bincount(toks_all).argmax()
     est = int(monoids.cms_query(state["cms"], jnp.int32(top)))
     assert est >= int((toks_all == top).sum())
+
+
+def test_ragged_batches_keep_only_whole_docs():
+    """ragged=True: rows end at their last EOS, the tail is padding under
+    valid_mask, and loss labels on padding are -1 — no rectangle of real
+    tokens is materialized."""
+    cfg = _cfg(mean_doc_len=16, ragged=True)
+    b = SyntheticCorpus(cfg)(0)
+    toks = np.asarray(b["tokens"])
+    mask = np.asarray(b["valid_mask"])
+    labels = np.asarray(b["labels"])
+    assert mask.shape == toks.shape
+    assert (toks[~mask] == cfg.pad_id).all()
+    next_invalid = np.concatenate(
+        [~mask[:, 1:], np.ones((toks.shape[0], 1), bool)], axis=1)
+    assert (labels[next_invalid] == -1).all()
+    for i in range(toks.shape[0]):
+        if mask[i].all():
+            continue                          # no EOS: whole row one open doc
+        last = np.where(mask[i])[0][-1]
+        assert toks[i, last] == cfg.eos_id    # every kept row ends a doc
+    # valid positions carry exactly the dense corpus' tokens (determinism)
+    dense = np.asarray(SyntheticCorpus(_cfg(mean_doc_len=16))(0)["tokens"])
+    np.testing.assert_array_equal(toks[mask], dense[mask])
+
+
+def test_packed_stats_single_masked_fold_matches_numpy():
+    cfg = _cfg(mean_doc_len=16, ragged=True)
+    b = SyntheticCorpus(cfg)(0)
+    st = packed_stats(b["tokens"], b["valid_mask"], eos_id=cfg.eos_id)
+    toks = np.asarray(b["tokens"])
+    mask = np.asarray(b["valid_mask"])
+    np.testing.assert_array_equal(np.asarray(st["tokens"]), mask.sum(1))
+    np.testing.assert_array_equal(
+        np.asarray(st["docs"]), ((toks == cfg.eos_id) & mask).sum(1))
+
+
+def test_stream_stats_masked_equals_dense_over_valid():
+    """update_stats(valid_mask=) == update_stats over only the valid tokens,
+    bit-for-bit across every sketch component (the mask path is the same
+    aggregation, not an approximation)."""
+    m = make_stream_stats()
+    cfg = _cfg(mean_doc_len=16, ragged=True)
+    b = SyntheticCorpus(cfg)(0)
+    masked = update_stats(init_stats(m), b["tokens"], b["valid_mask"])
+    valid = np.asarray(b["tokens"])[np.asarray(b["valid_mask"])]
+    dense = update_stats(init_stats(m), jnp.asarray(valid[None, :]))
+    for k in ("cms", "hll", "bloom", "count"):
+        np.testing.assert_array_equal(np.asarray(masked[k]),
+                                      np.asarray(dense[k]), err_msg=k)
 
 
 def test_stream_stats_merge_across_hosts():

@@ -118,6 +118,35 @@ print("ok")
 """)
 
 
+def test_execute_fold_mesh_tier_ragged_valid_mask():
+    """The serving case at mesh scale: a RAGGED keyed fold (per-shard
+    valid_mask) through the planner's collective tier == the dense fold
+    over only the valid rows — padding never crosses the wire combined in."""
+    run_distributed(PRELUDE + """
+from repro.core import execute_fold, monoids
+mesh_pod = jax.make_mesh((4, 2), ("data", "pod"),
+                         axis_types=(jax.sharding.AxisType.Auto,)*2)
+rng = np.random.default_rng(11)
+n, keys = 128, 8
+vals = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+segs = jnp.asarray(rng.integers(0, keys, n).astype(np.int32))
+mask = jnp.asarray(rng.random(n) < 0.6)
+want = jax.ops.segment_sum(vals[mask], segs[mask], num_segments=keys)
+
+def body(v, k, mk):
+    return execute_fold(monoids.sum_, v, segment_ids=k, num_segments=keys,
+                        valid_mask=mk, mesh_axes=("pod", "data"))
+
+spec = jax.sharding.PartitionSpec(("data", "pod"))
+out = jax.shard_map(body, mesh=mesh_pod, in_specs=(spec, spec, spec),
+                    out_specs=jax.sharding.PartitionSpec(),
+                    check_vma=False)(vals, segs, mask)
+np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4,
+                           atol=1e-4)
+print("ok")
+""")
+
+
 def test_moe_replicated_matches_local():
     run_distributed(PRELUDE + """
 import dataclasses

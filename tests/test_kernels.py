@@ -33,6 +33,28 @@ def test_segment_fold_dtypes(dtype):
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.parametrize("semiring", ["sum", "max", "min"])
+def test_segment_fold_valid_mask_drops_rows(semiring):
+    """Ragged kernel contract: valid_mask routes rows to the out-of-range
+    segment id, so the fold == the dense fold over only the valid rows, for
+    every semiring (and mask=None stays the dense path)."""
+    from repro.kernels.segment_fold import segment_fold_pallas
+
+    rng = np.random.default_rng(5)
+    n, d, s = 150, 6, 7
+    vals = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    mask = rng.random(n) < 0.5
+    got = segment_fold_pallas(vals, segs, s, semiring=semiring, block_n=32,
+                              valid_mask=jnp.asarray(mask))
+    kept_v = jnp.asarray(np.asarray(vals)[mask])
+    kept_s = jnp.asarray(np.asarray(segs)[mask])
+    want = segment_fold_pallas(kept_v, kept_s, s, semiring=semiring,
+                               block_n=32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_mean_by_key_kernel_is_paper_example():
     rng = np.random.default_rng(1)
     vals = jnp.asarray(rng.normal(size=(300, 1)).astype(np.float32))

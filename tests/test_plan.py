@@ -61,6 +61,180 @@ def test_keyed_tiers_match_generic_oracle(name, n, d, s, layout):
     _assert_tree_close(m, got, want)
 
 
+def _ragged_oracle(m, values, segs, s, mask):
+    """Fold over ONLY the valid rows (dense oracle for valid_mask)."""
+    keep = np.asarray(mask)
+    if not keep.any():
+        one = jax.tree_util.tree_map(lambda v: v[0], values)
+        ident = m.identity_like(one)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (s,) + l.shape), ident)
+    kept = jax.tree_util.tree_map(lambda v: jnp.asarray(np.asarray(v)[keep]),
+                                  values)
+    return _segment_fold_generic(m, kept, jnp.asarray(np.asarray(segs)[keep]),
+                                 s)
+
+
+@settings(max_examples=8, deadline=None)
+@given(name=st.sampled_from(["sum", "max", "min", "count", "mean",
+                             "bitwise_or"]),
+       n=st.integers(5, 120), d=st.integers(1, 9), s=st.integers(2, 10),
+       frac=st.floats(0.0, 1.0),
+       layout=st.sampled_from(KEYED_LAYOUTS))
+def test_ragged_keyed_fold_matches_dense_over_valid(name, n, d, s, frac,
+                                                    layout):
+    """The ragged contract on every tier: a keyed fold with valid_mask ==
+    the fold over only the valid rows, for the whole keyed zoo — including
+    all-False masks (every key holds the identity)."""
+    rng = np.random.default_rng(n * d + s + int(frac * 100))
+    m, values = _keyed_samples(name, n, d, rng)
+    segs = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    mask = rng.random(n) < frac
+    got = execute_fold(m, values, segment_ids=segs, num_segments=s,
+                       layout=layout, valid_mask=jnp.asarray(mask),
+                       block_n=64)
+    want = _ragged_oracle(m, values, segs, s, mask)
+    _assert_tree_close(m, got, want)
+
+
+@pytest.mark.parametrize("layout", KEYED_LAYOUTS)
+def test_ragged_keyed_fold_deterministic(layout):
+    """Non-hypothesis coverage of the mask path on all tiers (the skip-stub
+    container runs this even without hypothesis installed)."""
+    rng = np.random.default_rng(9)
+    n, d, s = 53, 4, 6
+    vals = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    for mask in (rng.random(n) < 0.6, np.zeros(n, bool), np.ones(n, bool)):
+        got = execute_fold(monoids.sum_, vals, segment_ids=segs,
+                           num_segments=s, layout=layout,
+                           valid_mask=jnp.asarray(mask), block_n=16)
+        want = _ragged_oracle(monoids.sum_, vals, segs, s, mask)
+        _assert_tree_close(monoids.sum_, got, want)
+
+
+def test_ragged_flat_fold_matches_dense_over_valid():
+    """valid_mask on FLAT folds: tree/scan tiers and the fused map_fn scan
+    all equal the fold over only the valid rows."""
+    rng = np.random.default_rng(21)
+    n = 19
+    vals = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    mask = rng.random(n) < 0.5
+    want = np.asarray(vals)[mask].sum(0)
+    for layout in ("tree", "scan"):
+        got = execute_fold(monoids.sum_, vals, valid_mask=jnp.asarray(mask),
+                           layout=layout)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
+                                   atol=1e-5)
+    xs = vals[:, 0]
+    fused = execute_fold(monoids.mean, xs, map_fn=lambda x: x * 3,
+                         valid_mask=jnp.asarray(mask), layout="scan")
+    np.testing.assert_allclose(float(monoids.mean.extract(fused)),
+                               float(np.asarray(xs)[mask].mean() * 3),
+                               rtol=1e-5)
+
+
+def test_ragged_fold_with_init_and_jit():
+    """valid_mask composes with init (the serve loop's running table) and
+    with jit (the mask is a tracer — num_valid just falls back to None)."""
+    rng = np.random.default_rng(4)
+    n, s = 40, 5
+    vals = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    mask = jnp.asarray(rng.random(n) < 0.7)
+    init = jnp.asarray(rng.normal(size=(s, 2)).astype(np.float32))
+
+    @jax.jit
+    def step(t, v, sg, mk):
+        return execute_fold(monoids.sum_, v, segment_ids=sg, num_segments=s,
+                            valid_mask=mk, init=t)
+
+    got = step(init, vals, segs, mask)
+    want = np.asarray(init) + np.asarray(
+        _ragged_oracle(monoids.sum_, vals, segs, s, np.asarray(mask)))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_plan_byte_model_counts_only_valid_rows():
+    """A concrete mask shows up in the plan: num_valid is static, the local
+    tier is marked masked, and Algorithm-1 pair bytes count valid rows."""
+    rng = np.random.default_rng(6)
+    n = 64
+    vals = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, 4, n).astype(np.int32))
+    mask = np.zeros(n, bool)
+    mask[:10] = True
+    kw = dict(segment_ids=segs, num_segments=4, mesh_axes=("shard",),
+              axis_sizes={"shard": 4})
+    p = plan_fold(monoids.sum_, vals, valid_mask=jnp.asarray(mask), **kw)
+    assert p.num_valid == 10
+    assert "+mask" in p.local_tier.detail
+    naive = plan_fold(monoids.sum_, vals, valid_mask=jnp.asarray(mask),
+                      pre_combine=False, **kw)
+    pair_bytes = 10 * p.value_bytes       # only valid rows become pairs
+    assert naive.tiers[0].out_bytes == pair_bytes
+    # abstract mask (plan-time ShapeDtypeStruct): count unknown, still masked
+    p2 = plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=4,
+                   valid_mask=jax.ShapeDtypeStruct((n,), jnp.bool_))
+    assert p2.num_valid is None and "+mask" in p2.local_tier.detail
+    with pytest.raises(ValueError, match="valid_mask"):
+        plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=4,
+                  valid_mask=jnp.ones((n + 1,), jnp.bool_))
+
+
+def test_shuffle_stats_count_only_valid_rows():
+    """ShuffleStats' byte prediction over a ragged job counts only valid
+    records as shuffled pairs (the serve batch's padding is free)."""
+    from repro.core import average_by_key_job
+
+    n = 32
+    rng = np.random.default_rng(3)
+    records = {"key": jnp.asarray(rng.integers(0, 4, n).astype(np.int32)),
+               "value": jnp.asarray(rng.normal(size=(n,)).astype(np.float32))}
+    mask = np.zeros(n, bool)
+    mask[:12] = True
+    job = average_by_key_job(num_keys=4)
+    dense = job.stats(records, strategy="naive", num_shards=1)
+    ragged = job.stats(records, strategy="naive", num_shards=1,
+                       valid_mask=jnp.asarray(mask))
+    assert dense.shuffle_values == n
+    assert ragged.shuffle_values == 12
+    assert ragged.shuffle_bytes_mapreduce == 12 * ragged.value_bytes
+    assert ragged.num_records == n
+    # shape-only planning (abstract mask) keeps the no-FLOPs contract and
+    # falls back to counting every row
+    abstract = job.stats(records, strategy="naive", num_shards=2,
+                         valid_mask=jax.ShapeDtypeStruct((n,), jnp.bool_))
+    assert abstract.shuffle_values == n
+    p = job.plan(records, strategy="combiner", num_shards=2,
+                 valid_mask=jax.ShapeDtypeStruct((n,), jnp.bool_))
+    assert p.num_valid is None and "+mask" in p.local_tier.detail
+
+
+def test_keyed_fold_missing_num_segments_error_is_actionable():
+    """The keyed error path names the MISSING kwarg (num_segments), not the
+    one that was already passed."""
+    vals = jnp.ones((8, 2), jnp.float32)
+    segs = jnp.zeros((8,), jnp.int32)
+    with pytest.raises(ValueError, match="num_segments="):
+        plan_fold(monoids.sum_, vals, segment_ids=segs)
+    with pytest.raises(ValueError, match="num_segments="):
+        execute_fold(monoids.sum_, vals, segment_ids=segs)
+
+
+@pytest.mark.parametrize("layout", ["kernel", "segment"])
+def test_unkeyed_kernel_layout_error_is_actionable(layout):
+    """layout='kernel'/'segment' without segment_ids must say what to pass
+    (segment_ids= AND num_segments=) and name the flat-fold alternatives."""
+    vals = jnp.ones((8, 2), jnp.float32)
+    for fn in (plan_fold, execute_fold):
+        with pytest.raises(ValueError) as ei:
+            fn(monoids.sum_, vals, layout=layout)
+        msg = str(ei.value)
+        assert "segment_ids=" in msg and "num_segments=" in msg
+        assert "tree" in msg and "scan" in msg
+
+
 @pytest.mark.parametrize("layout", ["tree", "scan"])
 @pytest.mark.parametrize("name", sorted(monoids.REGISTRY))
 def test_flat_tiers_match_local_fold(name, layout):

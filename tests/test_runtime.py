@@ -1,10 +1,128 @@
-"""Fault-tolerance control plane (simulated signals/timings)."""
+"""Runtime layer: serving batcher + fault-tolerance control plane
+(simulated signals/timings/clocks)."""
 import signal
 
+import numpy as np
 import pytest
 
-from repro.runtime import (ElasticController, PreemptionHandler,
-                           StragglerMonitor, checkpoint_interval, plan_remesh)
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import (DecodeBatch, ElasticController, PreemptionHandler,
+                           Request, RequestBatcher, StragglerMonitor,
+                           checkpoint_interval, plan_remesh)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# request batcher
+# ---------------------------------------------------------------------------
+
+def test_batcher_flushes_on_full_batch():
+    b = RequestBatcher(max_batch_size=3, max_wait_s=10.0, clock=FakeClock())
+    assert b.flush() is None
+    b.submit([1, 2]); b.submit([3])
+    assert not b.ready() and b.flush() is None       # partial + not waited
+    b.submit([4, 5, 6]); b.submit([7])
+    assert b.ready()
+    batch = b.flush()
+    assert [r.prompt for r in batch.requests] == [(1, 2), (3,), (4, 5, 6)]
+    assert len(b) == 1                                # FIFO remainder queued
+    assert batch.num_slots == 3
+
+
+def test_batcher_max_wait_flushes_partial_batch():
+    clk = FakeClock()
+    b = RequestBatcher(max_batch_size=8, max_wait_s=0.5, clock=clk)
+    b.submit([1]); b.submit([2, 3])
+    clk.t = 0.4
+    assert not b.ready()
+    clk.t = 0.51                                      # oldest waited out
+    assert b.ready()
+    batch = b.flush()
+    assert len(batch) == 2 and batch.num_slots == 8   # ragged, not re-shaped
+    assert batch.slot_valid.tolist() == [True, True] + [False] * 6
+    assert b.stats.waited_flushes == 1
+    assert b.stats.fill_rate(8) == pytest.approx(2 / 8)
+    # a FORCED partial drain is not a wait-policy fire
+    b.submit([4]); b.flush(force=True)
+    assert b.stats.waited_flushes == 1
+
+
+def test_batch_slots_are_segment_ids_and_pack_is_ragged():
+    reqs = tuple(Request(uid=i, prompt=tuple(range(1, n + 1)),
+                         max_new_tokens=4) for i, n in enumerate([3, 1, 5]))
+    batch = DecodeBatch(requests=reqs, num_slots=4)
+    np.testing.assert_array_equal(batch.segment_ids, [0, 1, 2, 3])
+    toks, lengths, valid = batch.pack(pad_id=0)
+    assert toks.shape == (4, 5)
+    np.testing.assert_array_equal(lengths, [3, 1, 5, 0])
+    np.testing.assert_array_equal(valid.sum(1), [3, 1, 5, 0])
+    assert (toks[~valid] == 0).all()
+    np.testing.assert_array_equal(toks[2], [1, 2, 3, 4, 5])
+    np.testing.assert_array_equal(batch.max_new(), [4, 4, 4, 0])
+
+
+# ---------------------------------------------------------------------------
+# the serve step's aggregation: ONE planner-lowered keyed fold per step
+# ---------------------------------------------------------------------------
+
+def test_decode_step_issues_single_planner_keyed_fold():
+    """Plan inspection (the serving contract): one decode step over B
+    concurrent requests aggregates through a SINGLE planner-lowered keyed
+    masked fold — one local tier for the whole batch, not B reductions."""
+    from repro.launch.serve import METRIC_COLS, decode_metrics_plan
+
+    B = 8
+    p = decode_metrics_plan(B, B)
+    local = [t for t in p.tiers if t.kind in ("kernel", "segment_ops",
+                                              "scan")]
+    assert len(local) == 1 and len(p.tiers) == 1
+    assert p.num_segments == B                 # request slot == segment id
+    assert p.num_records == B
+    assert "+mask" in local[0].detail          # ragged: padded slots masked
+    assert p.out_bytes == B * len(METRIC_COLS) * 4
+
+
+def test_decode_metrics_fold_equals_per_request_loop():
+    """The batched keyed fold == the per-request python loop it replaced
+    (logprob sums, token counts, stop hits), across ragged active masks."""
+    from repro.launch.serve import (decode_metrics_init, decode_metrics_step,
+                                    extract_metrics)
+
+    rng = np.random.default_rng(0)
+    B, V, eos, steps = 5, 13, 0, 4
+    table = decode_metrics_init(B)
+    want_logp = np.zeros(B)
+    want_toks = np.zeros(B, np.int64)
+    want_stop = np.zeros(B, bool)
+    slots = jnp.arange(B, dtype=jnp.int32)
+    for _ in range(steps):
+        logits = rng.normal(size=(B, V)).astype(np.float32)
+        sampled = rng.integers(0, V, B).astype(np.int32)
+        active = rng.integers(0, 2, B).astype(bool)
+        table = decode_metrics_step(table, jnp.asarray(logits),
+                                    jnp.asarray(sampled), slots,
+                                    jnp.asarray(active), num_slots=B,
+                                    eos_id=eos)
+        logp = np.asarray(jax.nn.log_softmax(jnp.asarray(logits), axis=-1))
+        for i in range(B):                     # the loop the fold replaces
+            if active[i]:
+                want_logp[i] += logp[i, sampled[i]]
+                want_toks[i] += 1
+                want_stop[i] |= sampled[i] == eos
+    got = extract_metrics(table)
+    np.testing.assert_allclose(got["logprob_sum"], want_logp, rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_array_equal(got["tokens"], want_toks)
+    np.testing.assert_array_equal(got["stopped"], want_stop)
 
 
 def test_preemption_flag():
