@@ -1,45 +1,54 @@
-"""Batched serving path: decode step + per-step keyed-fold aggregation.
+"""Continuous-batching serving path: engine arrival trace + step/fold rows.
 
 The serve-tier rows CI guards (``serve_`` prefix in ``run.py --compare``):
 
-* ``serve_decode_step``   — one batched decode step (model forward + cache
-  update) on the tiny smoke config.
-* ``serve_metrics_fold``  — the per-step aggregation alone: ONE
+* ``serve_decode_step``     — one batched decode step (model forward + cache
+  update) on the tiny smoke config (fixed-shape ``build_serve_step`` path).
+* ``serve_metrics_fold``    — the per-step aggregation alone: ONE
   planner-lowered masked keyed fold carrying logprob sums / token counts /
   stop hits for the whole batch.
-* ``serve_batch_e2e``     — a full ragged batch decoded to completion
-  through ``run_batched_decode`` (prefill + decode + metrics folds),
-  including fresh-cache setup, reported with tok/s derived.
+* ``serve_batch_e2e``       — a ragged batch decoded to completion through
+  the deprecated ``run_batched_decode`` shim (now engine-backed).
+* ``serve_ttft_p50/p99``    — time-to-first-token percentiles over a
+  synthetic Poisson arrival trace through the ContinuousEngine (rolling
+  slots, bucketed prefill); µs from submit to the streamed first token.
+* ``serve_tokens_per_sec``  — aggregate decode throughput over the same
+  trace, reported as µs/token so the lower-is-better gate applies.
 
 On CPU the Pallas tier runs in interpret mode (kernels/ops.py default);
 this is the CI `serve-smoke` workload.
 """
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.serve import (build_serve_step, decode_metrics_init,
-                                decode_metrics_step, run_batched_decode)
+from repro.launch.serve import (build_engine, build_serve_step,
+                                decode_metrics_init, decode_metrics_step,
+                                poisson_trace, run_batched_decode,
+                                serve_trace)
 from repro.runtime.batcher import RequestBatcher
+from repro.runtime.engine import ServeConfig
 
 from .common import row, time_fn
 
 ARCH = "qwen3-0.6b"
-MAX_BATCH = 4
-MAX_PROMPT = 16
-GEN = 8
+CONFIG = ServeConfig(arch=ARCH, num_slots=4, prefill_buckets=(8, 16),
+                     max_new_tokens=8)
+TRACE_REQUESTS = 12
+TRACE_RATE_HZ = 100.0
 
 
 def main():
-    cfg, built, params, make_cache = build_serve_step(
-        ARCH, max_batch=MAX_BATCH, max_seq=MAX_PROMPT + GEN)
+    cfg, built, params, make_cache = build_serve_step(CONFIG)
 
     # -- one decode step ----------------------------------------------------
     cache = make_cache()
-    tok = jnp.ones((MAX_BATCH, 1), jnp.int32)
+    tok = jnp.ones((CONFIG.num_slots, 1), jnp.int32)
     us = time_fn(lambda: built.fn(params, cache, tok)[0])
-    row(f"serve_decode_step[{cfg.name},B={MAX_BATCH}]", us,
-        f"{MAX_BATCH * 1e6 / us:.0f} tok/s")
+    row(f"serve_decode_step[{cfg.name},B={CONFIG.num_slots}]", us,
+        f"{CONFIG.num_slots * 1e6 / us:.0f} tok/s")
 
     # -- the per-step aggregation fold (request slot == segment id) ---------
     B = 8
@@ -56,23 +65,50 @@ def main():
                  warmup=5, iters=30)
     row(f"serve_metrics_fold[B={B},cols=3]", us, "one keyed fold/step")
 
-    # -- a ragged batch end-to-end ------------------------------------------
-    batcher = RequestBatcher(max_batch_size=MAX_BATCH, max_wait_s=0.0)
-    for i in range(MAX_BATCH - 1):           # deliberately partial: ragged
+    # -- a ragged batch end-to-end through the deprecated shim --------------
+    engine = build_engine(CONFIG)
+    batcher = RequestBatcher(max_batch_size=CONFIG.num_slots, max_wait_s=0.0)
+    for i in range(CONFIG.num_slots - 1):    # deliberately partial: ragged
         plen = 4 + 3 * i
         batcher.submit(rng.integers(1, cfg.vocab_size, plen).tolist(),
-                       max_new_tokens=GEN)
+                       max_new_tokens=CONFIG.max_new_tokens)
     batch = batcher.flush(force=True)
 
     def e2e():
-        res = run_batched_decode(built, params, make_cache(), batch,
-                                 eos_id=0, temperature=0.0)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            res = run_batched_decode(engine, batch)
         return res.metrics["tokens"]
 
     us = time_fn(e2e, warmup=1, iters=3)
     toks = int(np.sum(e2e()))
-    row(f"serve_batch_e2e[{cfg.name},reqs={len(batch)}/{MAX_BATCH},gen={GEN}]",
-        us, f"{toks * 1e6 / us:.0f} tok/s")
+    row(f"serve_batch_e2e[{cfg.name},reqs={len(batch)}/{CONFIG.num_slots},"
+        f"gen={CONFIG.max_new_tokens}]", us, f"{toks * 1e6 / us:.0f} tok/s")
+
+    # -- Poisson arrival trace through the rolling engine -------------------
+    # same engine: its bucket ladder is already compiled (the warmup above
+    # touched every shape), so the trace measures steady-state serving
+    trace = poisson_trace(rng, TRACE_REQUESTS, TRACE_RATE_HZ,
+                          min_prompt=4, max_prompt=CONFIG.max_prompt,
+                          vocab=cfg.vocab_size,
+                          max_new=CONFIG.max_new_tokens)
+    # touch the 8-bucket too (the shim batch above may only hit 16)
+    pre = [(0.0, [1, 2, 3], 1)]
+    serve_trace(engine, pre)
+    results, wall = serve_trace(engine, trace)
+
+    ttfts_us = np.array([r.ttft_s for r in results]) * 1e6
+    new_tokens = sum(len(r.tokens) for r in results)
+    label = (f"[{cfg.name},slots={CONFIG.num_slots},"
+             f"buckets={'x'.join(map(str, CONFIG.prefill_buckets))},"
+             f"reqs={TRACE_REQUESTS},rate={TRACE_RATE_HZ:.0f}]")
+    row(f"serve_ttft_p50{label}", float(np.percentile(ttfts_us, 50)),
+        "submit -> first token")
+    row(f"serve_ttft_p99{label}", float(np.percentile(ttfts_us, 99)),
+        "tail TTFT")
+    row(f"serve_tokens_per_sec{label}", wall * 1e6 / max(new_tokens, 1),
+        f"{new_tokens / wall:.0f} tok/s, "
+        f"{engine.stats.slot_reuses} slot reuses")
 
 
 if __name__ == "__main__":

@@ -1,62 +1,57 @@
-"""Batched serving: prefill a prompt batch, then decode with per-layer KV
-caches — the decode step is the same `serve_step` the 256-chip dry-run
-lowers; here it runs on CPU with a smoke config.
+"""Continuous-batching serving through the public `repro.serving` facade:
+requests with ragged prompts roll through a fixed population of slots, a
+freed slot is handed to the next waiting request mid-decode, and tokens
+stream back per-request as they decode.
 
 Run:  PYTHONPATH=src python examples/serve_decode.py [--arch qwen3-0.6b]
 """
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import context_spec, get_config
-from repro.models import decode_step, init_cache, init_params
+from repro.serving import ServeConfig, build_engine
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="qwen3-0.6b")
-ap.add_argument("--batch", type=int, default=4)
-ap.add_argument("--prompt-len", type=int, default=32)
-ap.add_argument("--gen", type=int, default=48)
+ap.add_argument("--requests", type=int, default=6)
+ap.add_argument("--slots", type=int, default=2)
+ap.add_argument("--gen", type=int, default=8)
 ap.add_argument("--temperature", type=float, default=1.0)
 args = ap.parse_args()
 
-cfg = get_config(args.arch, smoke=True)
-key = jax.random.PRNGKey(0)
-params, _ = init_params(cfg, key)
-B, P, G = args.batch, args.prompt_len, args.gen
-max_seq = P + G
+config = ServeConfig(arch=args.arch, num_slots=args.slots,
+                     prefill_buckets=(8, 16), max_new_tokens=args.gen,
+                     temperature=args.temperature)
+engine = build_engine(config)
 
-spec = context_spec(cfg, B)
-context = None if spec is None else jax.random.normal(key, spec.shape, cfg.dtype)
-prompt = jax.random.randint(key, (B, P), 1, cfg.vocab_size)
+rng = np.random.default_rng(0)
+vocab = engine.backend.vocab_size
+uids = []
+for _ in range(args.requests):
+    plen = int(rng.integers(4, config.max_prompt + 1))
+    uids.append(engine.submit(rng.integers(1, vocab, plen).tolist()))
 
-# -- prefill: run the prompt through the decode path to fill the caches ------
-cache = init_cache(params, cfg, B, max_seq, context=context)
-step = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
-t0 = time.perf_counter()
-for i in range(P):
-    logits, cache = step(params, cache, prompt[:, i:i + 1])
-prefill_s = time.perf_counter() - t0
+print(f"arch={args.arch}  slots={args.slots}  requests={args.requests}  "
+      f"buckets={config.prefill_buckets}  gen<={args.gen}")
 
-# -- decode: sample token by token -------------------------------------------
-tokens = [jnp.argmax(logits[:, -1], -1, keepdims=True)]
-t0 = time.perf_counter()
-for i in range(G - 1):
-    logits, cache = step(params, cache, tokens[-1])
-    if args.temperature > 0:
-        key, sub = jax.random.split(key)
-        nxt = jax.random.categorical(sub, logits[:, -1] / args.temperature,
-                                     axis=-1)[:, None]
+# stream: every token event carries (uid, slot, index); "done" carries the
+# final per-request metrics folded by the engine's keyed masked fold
+streamed = {u: [] for u in uids}
+for event in engine.run():
+    if event.kind == "token":
+        streamed[event.uid].append(event.token)
+        if event.index == 0:
+            print(f"  uid={event.uid} first token on slot {event.slot} "
+                  f"(ttft {event.ttft_s * 1e3:.0f}ms)")
     else:
-        nxt = jnp.argmax(logits[:, -1], -1, keepdims=True)
-    tokens.append(nxt)
-decode_s = time.perf_counter() - t0
-gen = np.asarray(jnp.concatenate(tokens, axis=1))
+        r = event.result
+        print(f"  uid={r.uid} done: {len(r.tokens)} tokens, "
+              f"logprob_sum={r.logprob_sum:.2f}, "
+              f"{'eos' if r.stopped else 'budget'} stop")
 
-print(f"arch={cfg.name}  batch={B}  prompt={P}  generated={G}")
-print(f"prefill: {prefill_s:.2f}s ({B*P/prefill_s:.0f} tok/s)   "
-      f"decode: {decode_s:.2f}s ({B*(G-1)/decode_s:.0f} tok/s)")
-print("sampled ids (seq 0):", gen[0, :16].tolist(), "...")
-print(f"cache position after run: {int(cache['pos'])} == {P + G - 1}")
+st = engine.stats
+assert all(streamed[u] == engine.result(u).tokens for u in uids)
+print(f"served {st.completed} requests / {st.generated_tokens} tokens in "
+      f"{st.steps} rolling decode steps, {st.slot_reuses} slot reuses")
+print(f"compiled shapes: {engine.compile_counts()} "
+      f"(bound: 2 + {len(config.prefill_buckets)} buckets)")

@@ -1,30 +1,32 @@
-"""Batched serving driver: the decode step as a keyed MapReduce pass.
+"""Continuous-batching serving driver: decode as a rolling keyed MapReduce.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
-      --requests 8 --max-batch 4 --min-prompt 8 --max-prompt 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \\
+      --requests 8 --slots 4 --buckets 8,16 --gen 8 --rate 50
 
-Concurrent requests are batched by :class:`repro.runtime.RequestBatcher`
-(max-batch-size / max-wait policies) and decoded together against one KV
-cache.  The serving-side aggregation — per-request logprob sums, generated
-token counts, and the stop-condition reduction — is ONE planner-lowered
-keyed fold per decode step (``request slot == segment id``), not a
-per-request Python loop: the same way the train step amortizes the shuffle
-with a combiner, the serve step amortizes both the kernel launch and the
-aggregation across the whole batch.  Requests have different prompt lengths
-and different generation budgets, so every fold runs ragged: a
-``valid_mask`` marks the rows (slots) that are actively generating this
-step, and masked rows contribute the monoid identity (core/plan.py).
+This module wires the model substrate (configs/models/mesh) into the
+model-agnostic :class:`repro.runtime.ContinuousEngine` and hosts the CLI.
+Requests arrive on a Poisson trace, queue FIFO in the engine's admission
+queue, and are admitted into *rolling slots*: a slot freed by an EOS or an
+exhausted budget is handed to the next waiting request mid-decode.  The
+per-request aggregation — logprob sums, generated token counts, and the
+stop-condition reduction — is ONE planner-lowered keyed fold per decode
+step (``request slot == segment id``) over whatever population currently
+occupies the slots, with a ``valid_mask`` for the empty ones: the same way
+the train step amortizes the shuffle with a combiner, the serve step
+amortizes both the kernel launch and the aggregation across the rolling
+batch.  Compilation is bounded by the prefill bucket ladder
+(:class:`repro.runtime.ServeConfig`), so slot churn never recompiles.
 
-The production-mesh serving step (256/512 chips, sequence-sharded KV for
-long contexts) is the same `make_decode_step` exercised by the dry-run;
-this driver runs it for real at host scale with smoke configs.
+The stable import surface for applications is :mod:`repro.serving`; the
+production-mesh serving step (sequence-sharded KV for long contexts) is
+still exercised by the dry-run via ``launch/steps.py``.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import functools
 import time
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -32,76 +34,102 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ShapeCell, context_spec, get_config
-from ..core import monoids
-from ..core.plan import Plan, execute_fold, plan_fold
-from ..models import init_cache, init_params
-from ..runtime.batcher import DecodeBatch, RequestBatcher
+from ..dist import sharding as shd
+from ..models import (RunCtx, decode_step, init_cache, init_params,
+                      param_axes, param_shapes)
+from ..runtime.batcher import DecodeBatch
+from ..runtime.engine import (ContinuousEngine, EngineBackend, ServeConfig,
+                              decode_metrics_init, decode_metrics_plan,
+                              decode_metrics_step, extract_metrics,
+                              METRIC_COLS)
 from .mesh import make_host_mesh
-from .steps import BuiltStep, make_decode_step
+from .steps import make_decode_step
 
-# columns of the per-request metrics table — ONE additive fold carries all
-# three: sum of sampled-token logprobs, count of generated tokens, and the
-# stop condition as a summed indicator (eos_hits > 0 <=> OR of eos hits)
-METRIC_COLS = ("logprob_sum", "tokens", "eos_hits")
-
-
-def decode_metrics_init(num_slots: int) -> jnp.ndarray:
-    """The identity table: (num_slots, len(METRIC_COLS)) float32 zeros."""
-    return jnp.zeros((num_slots, len(METRIC_COLS)), jnp.float32)
+__all__ = [
+    "METRIC_COLS", "decode_metrics_init", "decode_metrics_plan",
+    "decode_metrics_step", "extract_metrics", "ServeConfig", "BatchResult",
+    "build_engine", "build_serve_step", "run_batched_decode", "main",
+]
 
 
-def decode_metrics_plan(batch_rows: int, num_slots: int) -> Plan:
-    """The plan of ONE decode step's per-request aggregation (no FLOPs).
+def build_engine(config: ServeConfig, *,
+                 clock=time.perf_counter) -> ContinuousEngine:
+    """A :class:`ContinuousEngine` over the real model substrate.
 
-    This is the contract the serving path is built on: B concurrent
-    requests aggregate through a single keyed, masked fold — inspect the
-    plan to see one local tier, not B of them.
+    Builds params + mesh for ``config.arch`` and hands the engine a
+    traceable one-token decode (the same ``decode_step`` the dry-run
+    lowers) plus a cache constructor with per-slot positions for the
+    rolling cache.  Everything shape-dependent — slot count, prefill
+    bucket ladder, generation budget — comes from ``config``.
     """
-    return plan_fold(
-        monoids.sum_,
-        jax.ShapeDtypeStruct((batch_rows, len(METRIC_COLS)), jnp.float32),
-        segment_ids=jax.ShapeDtypeStruct((batch_rows,), jnp.int32),
-        num_segments=num_slots,
-        valid_mask=jax.ShapeDtypeStruct((batch_rows,), jnp.bool_))
+    cfg = get_config(config.arch, smoke=not config.full)
+    if context_spec(cfg, 1) is not None:
+        raise NotImplementedError(
+            f"{config.arch}: context-conditioned archs (audio/vision) are "
+            f"not supported by the continuous engine yet")
+    mesh = make_host_mesh(model=config.model_parallel)
+    rules = shd.trim_rules(shd.SERVE_RULES, mesh)
+    ctx = RunCtx(mesh=mesh)
+    key = jax.random.PRNGKey(config.seed)
+    params, _ = init_params(cfg, key)
+    if config.model_parallel > 1:
+        pshard = shd.param_shardings(param_shapes(cfg), param_axes(cfg),
+                                     mesh, rules)
+        params = jax.device_put(params, pshard)
+
+    def decode(p, cache, cur):
+        with shd.use_rules(mesh, rules):
+            logits, cache = decode_step(p, cfg, cache, cur, ctx=ctx)
+        return logits[:, -1].astype(jnp.float32), cache
+
+    def make_cache(batch: int, pos_per_slot: bool):
+        return init_cache(params, cfg, batch, config.max_seq, ctx=ctx,
+                          pos_per_slot=pos_per_slot)
+
+    def place(tree):
+        # commit with the sharding the mesh-aware jitted programs emit, so
+        # the engine's first write_slot call compiles once, not twice
+        return jax.device_put(
+            tree, jax.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+
+    backend = EngineBackend(decode=decode, init_cache=make_cache,
+                            params=params, vocab_size=cfg.vocab_size,
+                            place=place)
+    return ContinuousEngine(backend, config, clock=clock)
 
 
-@functools.partial(jax.jit, static_argnames=("num_slots", "eos_id"))
-def decode_metrics_step(table: jnp.ndarray, logits: jnp.ndarray,
-                        sampled: jnp.ndarray, slot_ids: jnp.ndarray,
-                        active: jnp.ndarray, *, num_slots: int,
-                        eos_id: int) -> jnp.ndarray:
-    """Fold one decode step's per-request aggregates into the running table.
+def build_serve_step(config: ServeConfig):
+    """(cfg, built, params, make_cache) for the FIXED-shape serve step.
 
-    logits: (B, V) last-position logits; sampled: (B,) sampled token ids;
-    slot_ids: (B,) request slot per row (segment ids); active: (B,) bool —
-    rows still generating this step.  The whole batch reduces in ONE
-    planner-lowered keyed fold; inactive/empty slots are masked to the
-    identity, and the running table rides in as ``init`` (the fold across
-    steps is the same monoid, re-bracketed — the paper's point).
+    The pre-engine API, now driven by the same :class:`ServeConfig`: one
+    jitted ``(num_slots, 1)`` decode step against a ``max_seq`` cache with
+    explicit mesh shardings.  The dry-run and the step-level benchmark rows
+    still exercise this; request-level serving goes through
+    :func:`build_engine`.
     """
-    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    tok_logp = jnp.take_along_axis(logp, sampled[:, None], axis=-1)[:, 0]
-    rows = jnp.stack(
-        [tok_logp, jnp.ones_like(tok_logp),
-         (sampled == eos_id).astype(jnp.float32)], axis=-1)
-    return execute_fold(monoids.sum_, rows, segment_ids=slot_ids,
-                        num_segments=num_slots, valid_mask=active,
-                        init=table)
+    cfg = get_config(config.arch, smoke=not config.full)
+    mesh = make_host_mesh(model=config.model_parallel)
+    shape = ShapeCell("serve", "decode", config.max_seq, config.num_slots)
+    built = make_decode_step(cfg, mesh, shape, donate=False)
+    key = jax.random.PRNGKey(config.seed)
+    params, _ = init_params(cfg, key)
+    params = jax.device_put(params, built.in_shardings[0])
+    spec = context_spec(cfg, config.num_slots)
+    context = None if spec is None else jax.random.normal(key, spec.shape,
+                                                          cfg.dtype)
 
+    def make_cache():
+        cache = init_cache(params, cfg, config.num_slots, config.max_seq,
+                           context=context)
+        return jax.device_put(cache, built.in_shardings[1])
 
-def extract_metrics(table: jnp.ndarray) -> Dict[str, np.ndarray]:
-    """Read the metrics table out into per-slot host arrays."""
-    t = np.asarray(table)
-    return {
-        "logprob_sum": t[:, 0],
-        "tokens": t[:, 1].astype(np.int64),
-        "stopped": t[:, 2] > 0,       # summed eos indicator == OR
-    }
+    return cfg, built, params, make_cache
 
 
 @dataclasses.dataclass
 class BatchResult:
-    """Outcome of decoding one flushed batch."""
+    """Outcome of decoding one flushed batch (legacy shape, kept for the
+    deprecated :func:`run_batched_decode` shim)."""
 
     batch: DecodeBatch
     tokens: np.ndarray            # (num_slots, max_new) generated ids (0-padded)
@@ -111,102 +139,103 @@ class BatchResult:
     decode_s: float
 
 
-def run_batched_decode(built: BuiltStep, params, cache, batch: DecodeBatch, *,
-                       eos_id: int = 0, pad_id: int = 0,
-                       temperature: float = 0.0,
-                       key: Optional[jax.Array] = None,
+def run_batched_decode(engine: ContinuousEngine, batch: DecodeBatch, *,
                        max_steps: Optional[int] = None) -> BatchResult:
-    """Decode one ragged batch to completion with per-step keyed-fold metrics.
+    """DEPRECATED: decode one fixed batch to completion through the engine.
 
-    The loop advances ALL slots one position per step.  A slot is forced
-    from its prompt while the position is inside it, then samples until it
-    hits ``eos_id``, exhausts its ``max_new_tokens`` budget, or the batch
-    hits ``max_steps``.  Per-step aggregation is one masked keyed fold —
-    see :func:`decode_metrics_step`.
+    The PR-3 API decoded a flushed :class:`DecodeBatch` as a unit; the
+    engine subsumes it — this shim submits the batch's requests, drains the
+    engine, and reassembles a :class:`BatchResult` (slot ``i`` of the
+    result is request ``i`` of the batch).  Use
+    :meth:`ContinuousEngine.submit` / :meth:`~ContinuousEngine.run`
+    directly: the engine overlaps requests instead of waiting for the
+    slowest one.
     """
-    toks, lengths, _ = batch.pack(pad_id=pad_id)
-    S, L = toks.shape
-    slot_ids = jnp.asarray(batch.segment_ids)
-    lengths_j = jnp.asarray(np.maximum(lengths, 1))   # empty slots idle at 1
-    max_new = jnp.asarray(batch.max_new())
-    budget = int(batch.max_new().max(initial=0))
-    total_steps = (L - 1) + budget if max_steps is None \
-        else min((L - 1) + budget, max_steps)
-
-    table = decode_metrics_init(S)
-    gen = np.zeros((S, max(budget, 1)), np.int64)
-    n_new = jnp.zeros((S,), jnp.int32)
-    done = jnp.asarray(~batch.slot_valid)             # empty slots start done
-    toks_j = jnp.asarray(toks)
-    cur = toks_j[:, 0:1]
-    if key is None:
-        key = jax.random.PRNGKey(0)
-
+    warnings.warn(
+        "run_batched_decode is deprecated: submit requests to "
+        "repro.serving.ContinuousEngine directly (continuous batching "
+        "replaces batch-to-completion decode)", DeprecationWarning,
+        stacklevel=2)
     t0 = time.perf_counter()
-    prefill_s = None
-    decode_steps = 0
-    for p in range(total_steps):
-        logits, cache = built.fn(params, cache, cur)
-        last = logits[:, -1]
-        if temperature > 0:
-            key, sub = jax.random.split(key)
-            sampled = jax.random.categorical(sub, last / temperature, axis=-1)
-        else:
-            sampled = jnp.argmax(last, axis=-1)
-        sampled = sampled.astype(jnp.int32)
-        in_prompt = (p + 1) < lengths_j               # next pos still forced
-        emitting = (~in_prompt) & (~done) & (n_new < max_new)
-        # ONE keyed fold for the whole batch: logprob sums + token counts +
-        # stop hits, ragged over the active slots
-        table = decode_metrics_step(table, last, sampled, slot_ids, emitting,
-                                    num_slots=S, eos_id=eos_id)
-        n_next = n_new + emitting.astype(jnp.int32)
-        done = done | (emitting & (sampled == eos_id)) | (n_next >= max_new)
-        # one host sync per step for the token buffer + stop poll
-        emit_np, idx_np, samp_np, all_done = jax.device_get(
-            (emitting, n_new, sampled, jnp.all(done)))
-        if emit_np.any():
-            if prefill_s is None:     # first emission anywhere: decode begins
-                prefill_s = time.perf_counter() - t0
-            gen[emit_np, idx_np[emit_np]] = samp_np[emit_np]
-            decode_steps += 1
-        n_new = n_next
-        forced = toks_j[:, min(p + 1, L - 1)]
-        cur = jnp.where(in_prompt, forced, sampled)[:, None]
-        if bool(all_done):
+    uids = [engine.submit(r.prompt, max_new_tokens=r.max_new_tokens)
+            for r in batch.requests]
+    first_tok_s = None
+    steps = 0
+    while engine.pending or engine.num_active:
+        for ev in engine.step():
+            if ev.kind == "token" and ev.index == 0 and first_tok_s is None:
+                first_tok_s = time.perf_counter() - t0
+        steps += 1
+        if max_steps is not None and steps >= max_steps:
             break
     total_s = time.perf_counter() - t0
-    if prefill_s is None:
-        prefill_s = total_s
-    return BatchResult(batch=batch, tokens=gen, metrics=extract_metrics(table),
-                       decode_steps=decode_steps, prefill_s=prefill_s,
+    prefill_s = first_tok_s if first_tok_s is not None else total_s
+
+    S = batch.num_slots
+    budget = max(int(batch.max_new().max(initial=0)), 1)
+    gen = np.zeros((S, budget), np.int64)
+    logprob = np.zeros((S,), np.float32)
+    tokens = np.zeros((S,), np.int64)
+    stopped = np.zeros((S,), bool)
+    for i, uid in enumerate(uids):
+        res = engine.result(uid)
+        gen[i, : len(res.tokens)] = res.tokens
+        logprob[i] = res.logprob_sum
+        tokens[i] = len(res.tokens)
+        stopped[i] = res.stopped
+    metrics = {"logprob_sum": logprob, "tokens": tokens, "stopped": stopped}
+    return BatchResult(batch=batch, tokens=gen, metrics=metrics,
+                       decode_steps=steps, prefill_s=prefill_s,
                        decode_s=max(total_s - prefill_s, 1e-9))
 
 
-def build_serve_step(arch: str, *, max_batch: int, max_seq: int,
-                     model_parallel: int = 1, full: bool = False,
-                     seed: int = 0):
-    """(cfg, built, params, make_cache): everything one serving loop needs.
+# ---------------------------------------------------------------------------
+# CLI: Poisson arrival trace through the engine
+# ---------------------------------------------------------------------------
 
-    ``make_cache()`` returns a fresh sharded KV cache — one per flushed
-    batch; params load once and are reused across batches.
+def poisson_trace(rng: np.random.Generator, n: int, rate_hz: float,
+                  min_prompt: int, max_prompt: int, vocab: int,
+                  max_new: int):
+    """[(arrival_offset_s, prompt, max_new)] — synthetic open-loop traffic."""
+    t = 0.0
+    out = []
+    for _ in range(n):
+        t += float(rng.exponential(1.0 / rate_hz)) if rate_hz > 0 else 0.0
+        plen = int(rng.integers(min_prompt, max_prompt + 1))
+        prompt = rng.integers(1, vocab, plen).tolist()
+        out.append((t, prompt, max_new))
+    return out
+
+
+def serve_trace(engine: ContinuousEngine, trace, *,
+                clock=time.perf_counter, quiet: bool = True):
+    """Replay an arrival trace through the engine in (scaled) real time.
+
+    Submits each request once its arrival offset elapses, stepping the
+    engine whenever it has work.  Returns ``(results, wall_s)`` with
+    results in submission order.
     """
-    cfg = get_config(arch, smoke=not full)
-    mesh = make_host_mesh(model=model_parallel)
-    shape = ShapeCell("serve", "decode", max_seq, max_batch)
-    built = make_decode_step(cfg, mesh, shape, donate=False)
-    key = jax.random.PRNGKey(seed)
-    params, _ = init_params(cfg, key)
-    params = jax.device_put(params, built.in_shardings[0])
-    spec = context_spec(cfg, max_batch)
-    context = None if spec is None else jax.random.normal(key, spec.shape,
-                                                          cfg.dtype)
-
-    def make_cache():
-        cache = init_cache(params, cfg, max_batch, max_seq, context=context)
-        return jax.device_put(cache, built.in_shardings[1])
-
-    return cfg, built, params, make_cache
+    t0 = clock()
+    uids = []
+    i = 0
+    while i < len(trace) or engine.pending or engine.num_active:
+        now = clock() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            _, prompt, max_new = trace[i]
+            uids.append(engine.submit(prompt, max_new_tokens=max_new))
+            i += 1
+        if engine.pending or engine.num_active:
+            for ev in engine.step():
+                if not quiet and ev.kind == "done":
+                    r = ev.result
+                    print(f"  uid={r.uid} slot={r.slot} prompt={r.prompt_len} "
+                          f"-> bucket={r.bucket} gen={len(r.tokens)} "
+                          f"logprob_sum={r.logprob_sum:.2f} "
+                          f"ttft={r.ttft_s * 1e3:.1f}ms")
+        elif i < len(trace):
+            time.sleep(min(max(trace[i][0] - now, 0.0), 0.01))
+    wall = clock() - t0
+    return [engine.result(u) for u in uids], wall
 
 
 def main(argv=None):
@@ -214,60 +243,50 @@ def main(argv=None):
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-wait-ms", type=float, default=0.0)
-    ap.add_argument("--min-prompt", type=int, default=8)
-    ap.add_argument("--max-prompt", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--buckets", default="8,16",
+                    help="comma-separated prefill bucket ladder")
+    ap.add_argument("--min-prompt", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=12)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson arrival rate (requests/s); 0 = all at once")
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1)
     args = ap.parse_args(argv)
 
-    cfg, built, params, make_cache = build_serve_step(
-        args.arch, max_batch=args.max_batch,
-        max_seq=args.max_prompt + args.gen,
-        model_parallel=args.model_parallel, full=args.full)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    if args.max_prompt > buckets[-1]:
+        raise SystemExit(f"--max-prompt {args.max_prompt} exceeds the "
+                         f"largest bucket {buckets[-1]}")
+    config = ServeConfig(arch=args.arch, num_slots=args.slots,
+                         prefill_buckets=buckets, max_new_tokens=args.gen,
+                         temperature=args.temperature, seed=args.seed,
+                         model_parallel=args.model_parallel, full=args.full)
+    engine = build_engine(config)
 
-    rng = np.random.default_rng(0)
-    batcher = RequestBatcher(max_batch_size=args.max_batch,
-                             max_wait_s=args.max_wait_ms / 1e3)
-    for _ in range(args.requests):
-        plen = int(rng.integers(args.min_prompt, args.max_prompt + 1))
-        prompt = rng.integers(1, cfg.vocab_size, plen).tolist()
-        batcher.submit(prompt, max_new_tokens=args.gen)
-
-    plan = decode_metrics_plan(args.max_batch, args.max_batch)
-    print(f"arch={cfg.name} requests={args.requests} "
-          f"max_batch={args.max_batch} gen<={args.gen}")
+    plan = decode_metrics_plan(config.num_slots, config.num_slots)
+    print(f"arch={args.arch} slots={config.num_slots} buckets={buckets} "
+          f"gen<={args.gen} requests={args.requests} rate={args.rate}/s")
     print(f"per-step aggregation plan: {plan.describe()}")
 
-    key = jax.random.PRNGKey(1)
-    served = new_tokens = 0
-    t0 = time.perf_counter()
-    while len(batcher):
-        if not batcher.ready():
-            # trailing partial batch: honor the max-wait latency bound
-            # before flushing it (full batches flush immediately)
-            time.sleep(max(args.max_wait_ms, 0.0) / 1e3)
-        batch = batcher.flush(force=True)
-        key, sub = jax.random.split(key)
-        res = run_batched_decode(built, params, make_cache(), batch,
-                                 eos_id=0, temperature=args.temperature,
-                                 key=sub)
-        served += len(batch)
-        toks = res.metrics["tokens"][batch.slot_valid]
-        new_tokens += int(toks.sum())
-        print(f"  batch of {len(batch)}: prompts="
-              f"{batch.lengths()[batch.slot_valid].tolist()} "
-              f"generated={toks.tolist()} "
-              f"logprob_sum={np.round(res.metrics['logprob_sum'][batch.slot_valid], 2).tolist()} "
-              f"({res.decode_steps} decode steps, "
-              f"{int(toks.sum()) / res.decode_s:.0f} tok/s)")
-    wall = time.perf_counter() - t0
-    st = batcher.stats
-    print(f"served {served} requests, {new_tokens} tokens in {wall:.2f}s "
-          f"({new_tokens / wall:.0f} tok/s) | batches={st.flushed_batches} "
-          f"fill={st.fill_rate(args.max_batch):.2f}")
+    rng = np.random.default_rng(args.seed)
+    vocab = engine.backend.vocab_size
+    trace = poisson_trace(rng, args.requests, args.rate, args.min_prompt,
+                          args.max_prompt, vocab, args.gen)
+    results, wall = serve_trace(engine, trace, quiet=False)
+
+    ttfts = np.array([r.ttft_s for r in results])
+    new_tokens = sum(len(r.tokens) for r in results)
+    st = engine.stats
+    print(f"served {len(results)} requests, {new_tokens} tokens in "
+          f"{wall:.2f}s ({new_tokens / wall:.0f} tok/s) | "
+          f"steps={st.steps} slot_reuses={st.slot_reuses} "
+          f"ttft p50={np.percentile(ttfts, 50) * 1e3:.1f}ms "
+          f"p99={np.percentile(ttfts, 99) * 1e3:.1f}ms")
+    print(f"compiled shapes: {engine.compile_counts()} "
+          f"(bound: 2 + {len(buckets)} buckets)")
     return 0
 
 

@@ -235,12 +235,43 @@ def _chunked_attention(cfg, q, k, v, q_pos, k_pos, *, window, chunk_size):
 # decode attention (1 new token against a cache)
 # ---------------------------------------------------------------------------
 
+def decode_positions(pos: jnp.ndarray, batch: int) -> jnp.ndarray:
+    """(B, 1) query positions from a scalar OR per-row ``pos``.
+
+    Scalar ``pos`` is the classic aligned-batch decode (every row at the
+    same position).  A ``(B,)`` ``pos`` is the continuous-batching case:
+    each request slot carries its own position, so a freed slot can restart
+    at 0 mid-decode while its neighbours keep generating.
+    """
+    if jnp.ndim(pos) == 1:
+        return pos[:, None].astype(jnp.int32)
+    return jnp.full((batch, 1), pos, jnp.int32)
+
+
+def cache_row_update(cache: jnp.ndarray, new: jnp.ndarray,
+                     pos: jnp.ndarray) -> jnp.ndarray:
+    """Write one new-token slice into a cache at scalar or per-row positions.
+
+    cache: (B, S, ...); new: (B, 1, ...); pos: () or (B,).  The per-row form
+    is a vmapped dynamic_update_slice — each request slot writes at its own
+    position (continuous batching).
+    """
+    if jnp.ndim(pos) == 1:
+        return jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+        )(cache, new, pos)
+    return jax.lax.dynamic_update_slice_in_dim(cache, new, pos, axis=1)
+
+
 def attention_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
                      cache: Tuple[jnp.ndarray, jnp.ndarray], pos: jnp.ndarray,
                      *, window: Optional[int] = None,
                      kv_shards: int = 1) -> Tuple[jnp.ndarray, Tuple]:
     """One decode step. x: (B, 1, D); cache: (k, v) each (B, S, KV, hd);
-    pos: () current position (tokens 0..pos-1 are valid in the cache).
+    pos: () current position (tokens 0..pos-1 are valid in the cache), or
+    (B,) per-slot positions for a continuously-batched cache — each row
+    writes and masks at its own position, so rows stay independent and a
+    reused slot's computation is identical to a fresh batch's.
 
     kv_shards > 1 requests flash-decoding: the KV cache's sequence axis is
     sharded over the 'model' mesh axis and partial attn_states are merged
@@ -248,10 +279,10 @@ def attention_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
     """
     kcache, vcache = cache
     B, S = kcache.shape[0], kcache.shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = decode_positions(pos, B)
     q, k_new, v_new = _project_qkv(p, cfg, x, positions)
-    kcache = jax.lax.dynamic_update_slice_in_dim(kcache, k_new, pos, axis=1)
-    vcache = jax.lax.dynamic_update_slice_in_dim(vcache, v_new, pos, axis=1)
+    kcache = cache_row_update(kcache, k_new, pos)
+    vcache = cache_row_update(vcache, v_new, pos)
     kcache = shd.act(kcache, ("batch", "kv_seq", "kv_heads", None))
     vcache = shd.act(vcache, ("batch", "kv_seq", "kv_heads", None))
 
@@ -278,6 +309,10 @@ def flash_decode_shardmap(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
     Used by the long_500k serving path. The new token's (k, v) is written by
     the owning shard only.
     """
+    if jnp.ndim(pos) == 1:
+        raise NotImplementedError(
+            "flash decode requires a scalar cache position; per-slot (B,) "
+            "positions (continuous batching) run the dense decode path")
     P = mesh.shape[axis_name]
     B, S = cache[0].shape[0], cache[0].shape[1]
     S_local = S // P
@@ -487,11 +522,11 @@ def mla_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
     """
     c_cache, r_cache = cache
     B, S = c_cache.shape[0], c_cache.shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = decode_positions(pos, B)
     q_nope, q_rope = _mla_q(p, cfg, x, positions)               # (B,1,H,*)
     c_new, r_new = _mla_latent(p, cfg, x, positions)
-    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new, pos, axis=1)
-    r_cache = jax.lax.dynamic_update_slice_in_dim(r_cache, r_new, pos, axis=1)
+    c_cache = cache_row_update(c_cache, c_new, pos)
+    r_cache = cache_row_update(r_cache, r_new, pos)
     c_cache = shd.act(c_cache, ("batch", "kv_seq", None))
     r_cache = shd.act(r_cache, ("batch", "kv_seq", None))
 

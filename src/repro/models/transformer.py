@@ -385,17 +385,23 @@ def _init_layer_cache(cfg: ModelConfig, ltype: str, batch: int, max_seq: int,
 
 def init_cache(params: Pytree, cfg: ModelConfig, batch: int, max_seq: int, *,
                context: Optional[jnp.ndarray] = None,
-               ctx: RunCtx = RunCtx()) -> Pytree:
+               ctx: RunCtx = RunCtx(), pos_per_slot: bool = False) -> Pytree:
     """Decode caches, mirroring the layer program's structure.
 
     For enc-dec / vision models, the cross-attention context KV is projected
     ONCE here and reused by every decode step (in-mapper combining of the
     static context — DESIGN.md §4).
+
+    ``pos_per_slot=True`` makes ``pos`` a ``(batch,)`` vector instead of a
+    scalar: every batch row (request slot) carries its own cache position,
+    which is what lets a continuously-batched engine retire a request and
+    restart the freed slot at position 0 while its neighbours keep decoding.
     """
     if cfg.encoder_layers > 0 and context is not None:
         context = encode(params, cfg, context, ctx=ctx)
     prelude, period_slots, remainder = _layer_plan(cfg)
-    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    pos0 = jnp.zeros((batch,) if pos_per_slot else (), jnp.int32)
+    cache: Dict[str, Any] = {"pos": pos0}
     for i, (lt, _) in enumerate(prelude):
         cache[f"prelude_{i}"] = _init_layer_cache(
             cfg, lt, batch, max_seq, params[f"prelude_{i}"], context)

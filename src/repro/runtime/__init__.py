@@ -1,6 +1,10 @@
-"""repro.runtime — serving batcher + fault tolerance (preemption, elastic
-re-mesh, stragglers)."""
+"""repro.runtime — continuous-batching serve engine, request batcher, and
+fault tolerance (preemption, elastic re-mesh, stragglers)."""
 from .batcher import BatcherStats, DecodeBatch, Request, RequestBatcher
+from .engine import (ContinuousEngine, EngineBackend, EngineStats,
+                     RequestResult, ServeConfig, StreamEvent,
+                     decode_metrics_init, decode_metrics_plan,
+                     decode_metrics_step, extract_metrics)
 from .fault_tolerance import (ElasticController, MeshPlan, PreemptionHandler,
                               StragglerMonitor, StragglerReport,
                               checkpoint_interval, plan_remesh)

@@ -157,6 +157,20 @@ class RequestBatcher:
         """True when a flush policy fires: full batch, or oldest waited out."""
         return any(self._policy())
 
+    def take(self, n: int) -> Tuple[Request, ...]:
+        """Pop up to ``n`` oldest pending requests (continuous-batching
+        admission: one request per freed slot, arrival order preserved).
+
+        Unlike :meth:`flush` this never waits on a policy — a free slot is
+        capacity going idle, so admission is immediate.
+        """
+        if n < 0:
+            raise ValueError("n must be >= 0")
+        take = min(n, len(self._pending))
+        reqs = tuple(self._pending.popleft() for _ in range(take))
+        self.stats.flushed_requests += take
+        return reqs
+
     def flush(self, *, force: bool = False) -> Optional[DecodeBatch]:
         """Pop the next batch when ready (or unconditionally with ``force``).
 

@@ -1,0 +1,571 @@
+"""Continuous-batching serve engine: rolling request slots, bucketed
+compilation, streaming decode.
+
+The paper's point is that monoid aggregation states can be merged
+incrementally, anywhere, at any time — which is precisely what a
+continuously-batched decode loop needs.  A fixed batch decoded to
+completion (PR 3's ``run_batched_decode``) wastes every slot whose request
+finished early; here a freed slot (= segment id, the planner's keyed-fold
+key) is handed to the next waiting request *mid-decode*, and the
+per-request metrics keep folding through the SAME keyed masked fold
+(:func:`decode_metrics_step`) over the rolling slot population — the fold
+never needs to know a slot changed hands, because the running table is just
+a monoid value re-bracketed across admissions (``init=`` carries it).
+
+Compilation is bucketed so slot churn never recompiles anything:
+
+* ONE decode-step program at ``(num_slots, 1)`` — model forward + per-row
+  sampling + the keyed masked metrics fold, jitted together.
+* ONE prefill program per ``prefill_bucket`` in the ladder — a
+  ``lax.scan`` of the decode step over a prompt padded to the bucket,
+  against a fresh single-slot cache.
+* ONE slot-write program — scatter the prefilled single-slot cache into
+  the rolling cache at the freed slot (and reset that slot's metrics row).
+
+So the number of distinct jitted shapes is bounded by
+``len(prefill_buckets) + 2`` for the whole engine lifetime (the
+recompile-count test in tests/test_serving.py asserts this).  Padding to
+the nearest bucket trades bounded extra prefill FLOPs for zero recompiles —
+the external-memory cost-model trade (Greiner & Jacob, PAPERS.md): pay
+predictable padding, never pay compilation.
+
+Slot independence is guaranteed by the model layer's per-slot cache
+positions (``init_cache(pos_per_slot=True)``): each row writes and masks
+its KV at its own position, so a reused slot's computation is bit-identical
+to the same request decoded alone.
+
+The engine is model-agnostic: it drives an :class:`EngineBackend` (a
+traceable decode function + cache constructor), so the whole slot/admission
+machinery is testable without a model.  ``repro.launch.serve.build_engine``
+wires the real model substrate; the stable import surface is
+``repro.serving``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import monoids
+from ..core.plan import Plan, execute_fold, plan_fold
+from .batcher import Request, RequestBatcher
+
+# ---------------------------------------------------------------------------
+# the per-request metrics fold (request slot == segment id)
+# ---------------------------------------------------------------------------
+
+# columns of the per-request metrics table — ONE additive fold carries all
+# three: sum of sampled-token logprobs, count of generated tokens, and the
+# stop condition as a summed indicator (eos_hits > 0 <=> OR of eos hits)
+METRIC_COLS = ("logprob_sum", "tokens", "eos_hits")
+
+
+def decode_metrics_init(num_slots: int) -> jnp.ndarray:
+    """The identity table: (num_slots, len(METRIC_COLS)) float32 zeros."""
+    return jnp.zeros((num_slots, len(METRIC_COLS)), jnp.float32)
+
+
+def decode_metrics_plan(batch_rows: int, num_slots: int) -> Plan:
+    """The plan of ONE decode step's per-request aggregation (no FLOPs).
+
+    This is the contract the serving path is built on: B concurrent
+    requests aggregate through a single keyed, masked fold — inspect the
+    plan to see one local tier, not B of them.
+    """
+    return plan_fold(
+        monoids.sum_,
+        jax.ShapeDtypeStruct((batch_rows, len(METRIC_COLS)), jnp.float32),
+        segment_ids=jax.ShapeDtypeStruct((batch_rows,), jnp.int32),
+        num_segments=num_slots,
+        valid_mask=jax.ShapeDtypeStruct((batch_rows,), jnp.bool_))
+
+
+def metric_rows(logits: jnp.ndarray, sampled: jnp.ndarray,
+                eos_id: int) -> jnp.ndarray:
+    """(B, V) logits + (B,) sampled ids -> (B, 3) metric rows to fold."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok_logp = jnp.take_along_axis(logp, sampled[:, None], axis=-1)[:, 0]
+    return jnp.stack(
+        [tok_logp, jnp.ones_like(tok_logp),
+         (sampled == eos_id).astype(jnp.float32)], axis=-1)
+
+
+def fold_decode_metrics(table: jnp.ndarray, rows: jnp.ndarray,
+                        slot_ids: jnp.ndarray, active: jnp.ndarray,
+                        num_slots: int) -> jnp.ndarray:
+    """ONE planner-lowered keyed masked fold of metric rows into the table."""
+    return execute_fold(monoids.sum_, rows, segment_ids=slot_ids,
+                        num_segments=num_slots, valid_mask=active, init=table)
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots", "eos_id"))
+def decode_metrics_step(table: jnp.ndarray, logits: jnp.ndarray,
+                        sampled: jnp.ndarray, slot_ids: jnp.ndarray,
+                        active: jnp.ndarray, *, num_slots: int,
+                        eos_id: int) -> jnp.ndarray:
+    """Fold one decode step's per-request aggregates into the running table.
+
+    logits: (B, V) last-position logits; sampled: (B,) sampled token ids;
+    slot_ids: (B,) request slot per row (segment ids); active: (B,) bool —
+    rows still generating this step.  The whole batch reduces in ONE
+    planner-lowered keyed fold; inactive/empty slots are masked to the
+    identity, and the running table rides in as ``init`` (the fold across
+    steps is the same monoid, re-bracketed — the paper's point).
+    """
+    rows = metric_rows(logits, sampled, eos_id)
+    return fold_decode_metrics(table, rows, slot_ids, active, num_slots)
+
+
+def extract_metrics(table: jnp.ndarray) -> Dict[str, np.ndarray]:
+    """Read the metrics table out into per-slot host arrays."""
+    t = np.asarray(table)
+    return {
+        "logprob_sum": t[:, 0],
+        "tokens": t[:, 1].astype(np.int64),
+        "stopped": t[:, 2] > 0,       # summed eos indicator == OR
+    }
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """One config object for the whole serving stack.
+
+    Shared by :class:`ContinuousEngine`, ``repro.launch.serve`` (model
+    wiring + CLI) and ``benchmarks/bench_serve.py`` — replaces the loose
+    ``(arch, max_batch, max_seq, ...)`` keywords the PR-3 API threaded
+    around.
+    """
+
+    arch: str = "qwen3-0.6b"
+    num_slots: int = 4                       # rolling request slots (segment ids)
+    prefill_buckets: Tuple[int, ...] = (16, 32)   # prompt-length ladder, ascending
+    max_new_tokens: int = 16                 # per-request generation ceiling
+    eos_id: int = 0
+    pad_id: int = 0
+    temperature: float = 0.0                 # 0 = greedy
+    seed: int = 0                            # sampling PRNG seed
+    model_parallel: int = 1
+    full: bool = False                       # full-size config (default: smoke)
+
+    def __post_init__(self):
+        buckets = tuple(int(b) for b in self.prefill_buckets)
+        if not buckets or any(b < 1 for b in buckets) or \
+                list(buckets) != sorted(set(buckets)):
+            raise ValueError(
+                f"prefill_buckets must be distinct ascending positive ints, "
+                f"got {self.prefill_buckets}")
+        object.__setattr__(self, "prefill_buckets", buckets)
+        if self.num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+
+    @property
+    def max_prompt(self) -> int:
+        return self.prefill_buckets[-1]
+
+    @property
+    def max_seq(self) -> int:
+        """Cache length: the largest bucket plus the generation ceiling."""
+        return self.prefill_buckets[-1] + self.max_new_tokens
+
+    def bucket_for(self, prompt_len: int) -> int:
+        """Smallest ladder bucket that fits the prompt."""
+        for b in self.prefill_buckets:
+            if prompt_len <= b:
+                return b
+        raise ValueError(
+            f"prompt of {prompt_len} tokens exceeds the largest prefill "
+            f"bucket ({self.prefill_buckets[-1]})")
+
+
+# ---------------------------------------------------------------------------
+# streaming API
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RequestResult:
+    """Final per-request record, built from the slot's metrics-table row."""
+
+    uid: int
+    slot: int
+    prompt_len: int
+    bucket: int
+    tokens: List[int]
+    logprob_sum: float
+    stopped: bool                 # hit eos (vs exhausted max_new_tokens)
+    stop_step: int                # engine step count at retirement
+    ttft_s: float                 # submit -> first streamed token
+    latency_s: float              # submit -> retirement
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamEvent:
+    """One streamed serving event.
+
+    kind == "token": ``token``/``index`` are set; ``ttft_s`` on index 0.
+    kind == "done":  ``result`` carries the full :class:`RequestResult`.
+    """
+
+    uid: int
+    kind: str                     # "token" | "done"
+    slot: int
+    step: int                     # engine step counter at emission
+    time_s: float
+    token: Optional[int] = None
+    index: Optional[int] = None   # position in the generated sequence
+    ttft_s: Optional[float] = None
+    result: Optional[RequestResult] = None
+
+
+# ---------------------------------------------------------------------------
+# backend contract
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineBackend:
+    """What the engine needs from a model substrate.
+
+    ``decode(params, cache, cur)`` must be *traceable* (the engine jits it,
+    fused with sampling and the metrics fold) and row-independent: row b of
+    the outputs depends only on row b of ``cache``/``cur``.  ``cur`` is
+    ``(B, 1)`` int32; it returns ``((B, V) float32 logits, new cache)``.
+
+    ``init_cache(batch, pos_per_slot)`` builds a fresh cache pytree whose
+    leaves carry the batch dim at axis 0 (axis 1 under the ``stacked_key``
+    subtree) plus a ``pos`` leaf — scalar, or ``(batch,)`` when
+    ``pos_per_slot`` (the rolling cache).
+    """
+
+    decode: Callable[[Any, Any, jnp.ndarray], Tuple[jnp.ndarray, Any]]
+    init_cache: Callable[[int, bool], Any]
+    params: Any
+    vocab_size: int
+    stacked_key: str = "layers"   # cache subtree with a leading stack dim
+    # placement for the engine's initial device state (rolling cache +
+    # metrics table).  Mesh-aware backends should commit with the SAME
+    # sharding their jitted outputs carry — otherwise the first write_slot
+    # call sees differently-placed args and compiles a second (identical)
+    # executable for the same shape.
+    place: Optional[Callable[[Any], Any]] = None
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class EngineStats:
+    submitted: int = 0
+    admitted: int = 0
+    completed: int = 0
+    steps: int = 0                # decode steps over the rolling population
+    slot_reuses: int = 0          # admissions into a previously-used slot
+    generated_tokens: int = 0
+
+
+@dataclasses.dataclass
+class _SlotState:
+    uid: int
+    seed: int
+    prompt_len: int
+    bucket: int
+    max_new: int
+    arrival_s: float
+    ttft_s: float
+    tokens: List[int]
+    cur: int                      # last sampled token (next step's input)
+
+    @property
+    def n_gen(self) -> int:
+        return len(self.tokens)
+
+
+class ContinuousEngine:
+    """Admit and retire requests *mid-decode* over rolling request slots.
+
+    Lifecycle per request: ``submit`` enqueues it on the FIFO admission
+    queue (a :class:`~repro.runtime.batcher.RequestBatcher`); when a slot
+    frees, ``_admit`` pads the prompt to the nearest prefill bucket, runs
+    the bucket's compiled prefill into a single-slot cache, scatters it
+    into the rolling cache (resetting the slot's cache position and metrics
+    row), and streams the first token (TTFT).  Every ``step()`` then
+    advances ALL occupied slots one token — model forward, per-row
+    sampling, and ONE planner-lowered keyed masked fold of the per-request
+    metrics — and retires slots that hit ``eos_id`` or their token budget,
+    which immediately frees them for the next waiting request.
+    """
+
+    def __init__(self, backend: EngineBackend, config: ServeConfig, *,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.backend = backend
+        self.config = config
+        self._clock = clock
+        # the batcher's FIFO is the admission queue: arrival order in,
+        # arrival order into freed slots (take(), not flush()).
+        self.queue = RequestBatcher(max_batch_size=config.num_slots,
+                                    max_wait_s=0.0, clock=clock)
+        self.stats = EngineStats()
+        self.results: Dict[int, RequestResult] = {}
+        self._slots: List[Optional[_SlotState]] = [None] * config.num_slots
+        self._used_before = [False] * config.num_slots
+        self._seeds: Dict[int, int] = {}
+        self._step_count = 0
+        place = backend.place if backend.place is not None else (lambda x: x)
+        self._cache = place(backend.init_cache(config.num_slots, True))
+        self._table = place(decode_metrics_init(config.num_slots))
+        self._build_compiled()
+
+    # -- compiled programs (the whole shape ladder) -------------------------
+
+    def _build_compiled(self) -> None:
+        cfg = self.config
+        S, V = cfg.num_slots, self.backend.vocab_size
+        eos, temp = cfg.eos_id, cfg.temperature
+        decode = self.backend.decode
+        stacked = self.backend.stacked_key
+        base_seed = cfg.seed
+
+        def sample_rows(logits, seeds, tok_idx):
+            if temp <= 0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            base = jax.random.PRNGKey(base_seed)
+
+            def one(s, i, l):
+                k = jax.random.fold_in(jax.random.fold_in(base, s), i)
+                return jax.random.categorical(k, l / temp)
+
+            # per-request key streams (seed, token index): sampling is
+            # independent of slot assignment and neighbours, so a request
+            # decodes identically alone or in a rolling batch
+            return jax.vmap(one)(seeds, tok_idx, logits).astype(jnp.int32)
+
+        def step_impl(params, cache, cur, active, seeds, tok_idx, table):
+            logits, cache = decode(params, cache, cur)
+            sampled = sample_rows(logits, seeds, tok_idx)
+            rows = metric_rows(logits, sampled, eos)
+            table = fold_decode_metrics(
+                table, rows, jnp.arange(S, dtype=jnp.int32), active, S)
+            return cache, sampled, table
+
+        self._step_fn = jax.jit(step_impl, donate_argnums=(1,))
+
+        def make_prefill(bucket: int):
+            def prefill_impl(params, cache1, toks, length, seed):
+                def body(carry, x):
+                    cache, last = carry
+                    tok, i = x
+                    logits, cache = decode(params, cache, tok[:, None])
+                    last = jnp.where(i == length - 1, logits, last)
+                    return (cache, last), None
+
+                xs = (toks.T, jnp.arange(bucket))
+                (cache1, last), _ = jax.lax.scan(
+                    body, (cache1, jnp.zeros((1, V), jnp.float32)), xs)
+                sampled = sample_rows(last, jnp.full((1,), seed, jnp.int32),
+                                      jnp.zeros((1,), jnp.int32))
+                row = metric_rows(last, sampled, eos)[0]
+                return cache1, sampled[0], row
+
+            return jax.jit(prefill_impl, donate_argnums=(1,))
+
+        self._prefill_fns = {b: make_prefill(b) for b in cfg.prefill_buckets}
+
+        def write_impl(cache, cache1, slot, length, table, row):
+            def put(path, big, small):
+                keys = [getattr(e, "key", None) for e in path]
+                if keys and keys[0] == "pos":
+                    # slot restarts at its prompt length (positions are
+                    # per-slot: init_cache(pos_per_slot=True))
+                    return big.at[slot].set(jnp.asarray(length, big.dtype))
+                axis = 1 if stacked in keys else 0
+                return jax.lax.dynamic_update_slice_in_dim(
+                    big, small, slot, axis=axis)
+
+            new = jax.tree_util.tree_map_with_path(put, cache, cache1)
+            # reset + first token in one write: the row IS the first fold
+            return new, table.at[slot].set(row)
+
+        self._write_fn = jax.jit(write_impl, donate_argnums=(0, 1, 4))
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Distinct compiled shapes per engine program (the bucket-ladder
+        bound: step == 1, write_slot == 1, each prefill bucket <= 1)."""
+        def n(f):
+            try:
+                return int(f._cache_size())
+            except Exception:      # pragma: no cover - older jax
+                return -1
+
+        counts = {"step": n(self._step_fn), "write_slot": n(self._write_fn)}
+        for b, f in self._prefill_fns.items():
+            counts[f"prefill_{b}"] = n(f)
+        return counts
+
+    # -- request lifecycle --------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        """Requests waiting in the admission queue."""
+        return len(self.queue)
+
+    @property
+    def num_active(self) -> int:
+        """Slots currently occupied by a generating request."""
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def active_uids(self) -> List[int]:
+        return [s.uid for s in self._slots if s is not None]
+
+    def submit(self, prompt: Sequence[int], *,
+               max_new_tokens: Optional[int] = None,
+               seed: Optional[int] = None) -> int:
+        """Enqueue a request; returns its uid.  Admission happens on the
+        next :meth:`step` as soon as a slot is free."""
+        cfg = self.config
+        prompt = tuple(int(t) for t in prompt)
+        if not prompt:
+            raise ValueError("prompt must be non-empty")
+        cfg.bucket_for(len(prompt))      # raises if it exceeds the ladder
+        max_new = cfg.max_new_tokens if max_new_tokens is None \
+            else int(max_new_tokens)
+        if not (1 <= max_new <= cfg.max_new_tokens):
+            raise ValueError(
+                f"max_new_tokens must be in [1, {cfg.max_new_tokens}], "
+                f"got {max_new}")
+        uid = self.queue.submit(prompt, max_new_tokens=max_new)
+        self._seeds[uid] = uid if seed is None else int(seed)
+        self.stats.submitted += 1
+        return uid
+
+    def result(self, uid: int) -> RequestResult:
+        return self.results[uid]
+
+    def _admit(self, events: List[StreamEvent]) -> None:
+        free = [i for i, s in enumerate(self._slots) if s is None]
+        if not free:
+            return
+        for req, slot in zip(self.queue.take(len(free)), free):
+            self._admit_one(req, slot, events)
+
+    def _admit_one(self, req: Request, slot: int,
+                   events: List[StreamEvent]) -> None:
+        cfg = self.config
+        plen = len(req.prompt)
+        bucket = cfg.bucket_for(plen)
+        toks = np.full((1, bucket), cfg.pad_id, np.int32)
+        toks[0, :plen] = req.prompt
+        seed = self._seeds.pop(req.uid, req.uid)
+        cache1 = self.backend.init_cache(1, False)
+        cache1, first, row = self._prefill_fns[bucket](
+            self.backend.params, cache1, jnp.asarray(toks), plen, seed)
+        self._cache, self._table = self._write_fn(
+            self._cache, cache1, slot, plen, self._table, row)
+        first = int(jax.device_get(first))
+        now = self._clock()
+        ttft = now - req.arrival_s
+        st = _SlotState(uid=req.uid, seed=seed, prompt_len=plen,
+                        bucket=bucket, max_new=req.max_new_tokens,
+                        arrival_s=req.arrival_s, ttft_s=ttft,
+                        tokens=[first], cur=first)
+        self._slots[slot] = st
+        self.stats.admitted += 1
+        self.stats.generated_tokens += 1
+        if self._used_before[slot]:
+            self.stats.slot_reuses += 1
+        self._used_before[slot] = True
+        events.append(StreamEvent(uid=st.uid, kind="token", slot=slot,
+                                  step=self._step_count, time_s=now,
+                                  token=first, index=0, ttft_s=ttft))
+        if first == cfg.eos_id or st.max_new <= 1:
+            self._retire([slot], events, now)
+
+    def _retire(self, slots: List[int], events: List[StreamEvent],
+                now: float) -> None:
+        table = np.asarray(jax.device_get(self._table))
+        for slot in slots:
+            st = self._slots[slot]
+            res = RequestResult(
+                uid=st.uid, slot=slot, prompt_len=st.prompt_len,
+                bucket=st.bucket, tokens=list(st.tokens),
+                logprob_sum=float(table[slot, 0]),
+                stopped=bool(table[slot, 2] > 0),
+                stop_step=self._step_count,
+                ttft_s=st.ttft_s, latency_s=now - st.arrival_s)
+            self.results[st.uid] = res
+            self._slots[slot] = None
+            self.stats.completed += 1
+            events.append(StreamEvent(uid=st.uid, kind="done", slot=slot,
+                                      step=self._step_count, time_s=now,
+                                      result=res))
+
+    # -- the rolling decode step --------------------------------------------
+
+    def step(self) -> List[StreamEvent]:
+        """Admit waiting requests into free slots, then advance the whole
+        rolling population one token.  Returns the streamed events."""
+        events: List[StreamEvent] = []
+        self._admit(events)
+        S = self.config.num_slots
+        occupied = [i for i, s in enumerate(self._slots) if s is not None]
+        if not occupied:
+            return events
+
+        cur = np.zeros((S, 1), np.int32)
+        active = np.zeros((S,), bool)
+        seeds = np.zeros((S,), np.int32)
+        tok_idx = np.zeros((S,), np.int32)
+        for i in occupied:
+            st = self._slots[i]
+            cur[i, 0] = st.cur
+            active[i] = True
+            seeds[i] = st.seed
+            tok_idx[i] = st.n_gen
+        self._cache, sampled, self._table = self._step_fn(
+            self.backend.params, self._cache, jnp.asarray(cur),
+            jnp.asarray(active), jnp.asarray(seeds), jnp.asarray(tok_idx),
+            self._table)
+        self._step_count += 1
+        self.stats.steps += 1
+
+        sampled_np = np.asarray(jax.device_get(sampled))
+        now = self._clock()
+        retired = []
+        for i in occupied:
+            st = self._slots[i]
+            tok = int(sampled_np[i])
+            index = st.n_gen
+            st.tokens.append(tok)
+            st.cur = tok
+            self.stats.generated_tokens += 1
+            events.append(StreamEvent(uid=st.uid, kind="token", slot=i,
+                                      step=self._step_count, time_s=now,
+                                      token=tok, index=index))
+            if tok == self.config.eos_id or st.n_gen >= st.max_new:
+                retired.append(i)
+        if retired:
+            self._retire(retired, events, now)
+        return events
+
+    def run(self, *, max_steps: Optional[int] = None) -> Iterator[StreamEvent]:
+        """Stream events until the queue and every slot drain."""
+        steps = 0
+        while self.pending or self.num_active:
+            yield from self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                raise RuntimeError(
+                    f"engine did not drain within {max_steps} steps "
+                    f"({self.pending} pending, {self.num_active} active)")

@@ -1,0 +1,36 @@
+"""repro.serving — the stable public serving facade.
+
+Continuous batching as the paper's monoid principle applied to inference:
+requests roll through a fixed population of slots, per-request aggregates
+fold through ONE planner-lowered keyed masked fold per decode step
+(request slot == segment id), and compilation is bounded by a declared
+prefill-bucket ladder.
+
+  from repro.serving import ContinuousEngine, ServeConfig, build_engine
+
+  engine = build_engine(ServeConfig(arch="qwen3-0.6b", num_slots=4,
+                                    prefill_buckets=(8, 16)))
+  uid = engine.submit([1, 17, 42], max_new_tokens=8)
+  for event in engine.run():        # StreamEvents as tokens decode
+      ...
+
+The engine itself is model-agnostic (``repro.runtime.engine``); this
+module is the import surface applications should depend on —
+``build_engine`` wires the real model substrate, and the engine classes,
+the request/stream types, and the admission-queue types are all here.
+"""
+from ..launch.serve import build_engine, build_serve_step, run_batched_decode
+from ..runtime.batcher import BatcherStats, DecodeBatch, Request, RequestBatcher
+from ..runtime.engine import (ContinuousEngine, EngineBackend, EngineStats,
+                              METRIC_COLS, RequestResult, ServeConfig,
+                              StreamEvent, decode_metrics_init,
+                              decode_metrics_plan, decode_metrics_step,
+                              extract_metrics)
+
+__all__ = [
+    "BatcherStats", "ContinuousEngine", "DecodeBatch", "EngineBackend",
+    "EngineStats", "METRIC_COLS", "Request", "RequestBatcher",
+    "RequestResult", "ServeConfig", "StreamEvent", "build_engine",
+    "build_serve_step", "decode_metrics_init", "decode_metrics_plan",
+    "decode_metrics_step", "extract_metrics", "run_batched_decode",
+]
