@@ -1,0 +1,70 @@
+"""Cost-model planner benches: does ``layout='auto'`` pick a winner?
+
+For each case, one ``plan_auto/<case>`` row (the planner's argmin choice)
+and one ``plan_forced/<case>/<layout>`` row per feasible forced layout.
+The CI gate (``benchmarks/run.py --compare``) checks auto stays within
+tolerance of the BEST forced row — the cost model must not mis-place a
+fold by more than timing noise.  Derived columns carry the plan's chain
+and its predicted microseconds next to the measurement, so the artifact
+history tracks modeled-vs-measured drift.
+
+On TPU (``REPRO_INTERPRET=0``) the kernel layout is a candidate and its
+row measures the real compiled Pallas kernel; on CPU the kernel tier is
+infeasible for auto and is skipped (interpret-mode timings would poison
+the comparison).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import execute_fold, monoids, plan_fold
+from .common import row, time_fn
+
+# (case name, monoid, dtype, feasible forced layouts checked off-TPU)
+_CASES = (
+    ("sum_f32", monoids.sum_, jnp.float32, ("segment", "scan")),
+    ("max_f32", monoids.max_, jnp.float32, ("segment", "scan")),
+    ("mean_f32", monoids.mean, jnp.float32, ("segment", "scan")),
+)
+
+# guarded rows: extra iters to stabilize the median (same as bench_aggregation)
+_GUARD = dict(warmup=3, iters=9)
+
+
+def _values(m, n, d, dtype, rng):
+    vals = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)).astype(dtype)
+    if m.name == "mean":
+        return (vals, jnp.ones((n,), jnp.int32))
+    return vals
+
+
+def bench_auto_vs_forced(n: int = 1 << 12, d: int = 64, s: int = 128):
+    rng = np.random.default_rng(7)
+    segs = jnp.asarray(rng.integers(0, s, n).astype(np.int32))
+    on_tpu = jax.default_backend() == "tpu"
+
+    for case, m, dtype, layouts in _CASES:
+        vals = _values(m, n, d, dtype, rng)
+        if on_tpu:
+            layouts = ("kernel",) + tuple(layouts)
+        plan = plan_fold(m, vals, segment_ids=segs, num_segments=s)
+        auto = jax.jit(lambda v, k, m=m: execute_fold(
+            m, v, segment_ids=k, num_segments=s))
+        row(f"plan_auto/{case}", time_fn(auto, vals, segs, **_GUARD),
+            f"chose={plan.local_tier.kind};predicted_us="
+            f"{plan.local_tier.predicted_us:.1f};plan={plan.describe()}")
+        for layout in layouts:
+            forced = jax.jit(lambda v, k, m=m, layout=layout: execute_fold(
+                m, v, segment_ids=k, num_segments=s, layout=layout))
+            pred = dict(plan.candidate_us).get(layout, 0.0)
+            row(f"plan_forced/{case}/{layout}",
+                time_fn(forced, vals, segs, **_GUARD),
+                f"predicted_us={pred:.1f}")
+
+
+def main():
+    bench_auto_vs_forced()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,178 @@
-"""Render the §Roofline table from the dry-run JSONs (benchmarks/results/).
+"""Render the §Roofline table from the dry-run JSONs (benchmarks/results/),
+and — with ``--calibrate`` — measure the planner's cost-model coefficients.
 
   PYTHONPATH=src python -m benchmarks.roofline [--results DIR] [--md]
+  PYTHONPATH=src python -m benchmarks.roofline --calibrate [--quick] [--out P]
 
 The dry-run sweep itself is `python -m repro.launch.dryrun --arch all
 --shape all --out benchmarks/results/baseline_single_pod.json` (and
 --multi-pod for the 512-chip pass).
+
+``--calibrate`` times each local tier (kernel on TPU, segment-ops, scan,
+tree) at three (record count, record bytes) points per (monoid, dtype),
+fits ``t(n, b) = t0 + n*us_per_record + n*b*us_per_byte`` through them
+(``repro.core.calibration.fit_tier_coeff``), measures per-axis collective
+bandwidth when more than one device is visible, and writes the merged
+table over the shipped defaults to the calibration cache
+(``$REPRO_CALIB`` or ``~/.cache/repro/calib.json``; override with
+``--out``).  ``--quick`` shrinks the sizes/monoid set for CI smoke runs.
 """
 import argparse
 import json
 import os
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+# ---------------------------------------------------------------------------
+# --calibrate: the microbenchmark harness behind the planner's cost model
+# ---------------------------------------------------------------------------
+
+def _time_keyed(m, layout, n, d, dtype, num_segments, warmup, iters):
+    """Median us of one jitted keyed fold at (n rows, d lanes, dtype)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.plan import execute_fold
+    from .common import time_fn
+
+    vals = jnp.ones((n, d), dtype)
+    seg = jnp.arange(n, dtype=jnp.int32) % num_segments
+    fn = jax.jit(lambda v, s: execute_fold(
+        m, v, segment_ids=s, num_segments=num_segments, layout=layout))
+    return time_fn(fn, vals, seg, warmup=warmup, iters=iters)
+
+
+def _time_flat(m, layout, n, d, dtype, warmup, iters):
+    """Median us of one jitted flat fold (the tree tier)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.plan import execute_fold
+    from .common import time_fn
+
+    vals = jnp.ones((n, d), dtype)
+    fn = jax.jit(lambda v: execute_fold(m, v, layout=layout))
+    return time_fn(fn, vals, warmup=warmup, iters=iters)
+
+
+def _fit_tier(measure, n1, n2, d1, d2, itemsize, warmup, iters):
+    """Three-point fit: (n1, b1), (n2, b1), (n2, b2)."""
+    from repro.core.calibration import fit_tier_coeff
+
+    t11 = measure(n1, d1)
+    t21 = measure(n2, d1)
+    t22 = measure(n2, d2)
+    return fit_tier_coeff(n1=n1, b1=d1 * itemsize, t11_us=t11,
+                          n2=n2, t21_us=t21,
+                          b2=d2 * itemsize, t22_us=t22)
+
+
+def _measure_collectives(warmup, iters):
+    """Fit the ICI link model from a psum over all visible devices.
+
+    Single-device processes (CPU CI) skip this and keep the shipped link
+    defaults; DCN is never measurable from one host, so it always keeps
+    the default until a multi-pod calibration run exists.
+    """
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.core.calibration import fit_link_coeff
+    from .common import time_fn
+
+    devs = jax.devices()
+    if len(devs) < 2:
+        return {}
+    P_ = len(devs)
+    mesh = Mesh(np.array(devs), ("x",))
+
+    def timed_psum(nbytes):
+        n = max(nbytes // 4, 1)
+        x = jnp.ones((P_, n), jnp.float32)
+        fn = jax.jit(jax.shard_map(
+            lambda v: jax.lax.psum(v, "x"), mesh=mesh,
+            in_specs=(P("x"),), out_specs=P(), check_vma=False))
+        return time_fn(fn, x, warmup=warmup, iters=iters)
+
+    b1, b2 = 1 << 12, 1 << 20
+    # per-device ring bytes for an allreduce of an nbytes payload
+    wire = lambda b: 2.0 * b * (P_ - 1) / P_
+    coeff = fit_link_coeff(bytes1=int(wire(b1)), t1_us=timed_psum(b1),
+                           bytes2=int(wire(b2)), t2_us=timed_psum(b2))
+    return {"ici": coeff}
+
+
+def calibrate(quick=False, out=None):
+    """Measure, fit, merge over defaults, save; returns (Calibration, path)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import monoids
+    from repro.core.calibration import (CALIB_VERSION, Calibration,
+                                        default_calibration, save_calibration)
+
+    backend = jax.default_backend()
+    warmup, iters = (1, 3) if quick else (2, 7)
+    n1, n2 = (256, 2048) if quick else (1024, 16384)
+    d1, d2 = (4, 32) if quick else (4, 64)
+    num_segments = 64
+    zoo = [(monoids.sum_, "sum", jnp.float32)]
+    if not quick:
+        zoo += [(monoids.sum_, "sum", jnp.int32),
+                (monoids.max_, "max", jnp.float32),
+                (monoids.mean, "mean", jnp.float32)]
+
+    default = default_calibration()
+    tiers = {k: dict(t) for k, t in default.tiers.items()}
+
+    def record(kind, monoid_name, dtype, coeff):
+        table = tiers.setdefault(kind, {})
+        key = f"{monoid_name}|{jnp.dtype(dtype).name}"
+        table[key] = coeff
+        # first measurement of a tier also becomes its generic entry, so
+        # unmeasured monoids inherit the measured machine scale
+        if default.tiers.get(kind, {}).get("*") is table.get("*"):
+            table["*"] = coeff
+        print(f"calib {kind:12s} {key:16s} t0={coeff.t0_us:.2f}us "
+              f"rec={coeff.us_per_record:.3e} byte={coeff.us_per_byte:.3e}")
+
+    # scan-tier measurements walk n records serially: cap n2 so full mode
+    # doesn't spend minutes in lax.scan on CPU
+    scan_n2 = min(n2, 4096)
+    for m, name, dtype in zoo:
+        itemsize = jnp.dtype(dtype).itemsize
+        if name in ("sum", "max", "mean"):   # _SEGMENT_OPS members
+            record("segment_ops", name, dtype, _fit_tier(
+                lambda n, d: _time_keyed(m, "segment", n, d, dtype,
+                                         num_segments, warmup, iters),
+                n1, n2, d1, d2, itemsize, warmup, iters))
+        record("scan", name, dtype, _fit_tier(
+            lambda n, d: _time_keyed(m, "scan", n, d, dtype,
+                                     num_segments, warmup, iters),
+            n1, scan_n2, d1, d2, itemsize, warmup, iters))
+        record("tree", name, dtype, _fit_tier(
+            lambda n, d: _time_flat(m, "tree", n, d, dtype, warmup, iters),
+            n1, n2, d1, d2, itemsize, warmup, iters))
+        if backend == "tpu":
+            # compiled-kernel rows: only real hardware produces honest
+            # kernel coefficients (interpret mode would be 1000x off)
+            record("kernel", name, dtype, _fit_tier(
+                lambda n, d: _time_keyed(m, "kernel", n, d, dtype,
+                                         num_segments, warmup, iters),
+                n1, n2, d1, d2, itemsize, warmup, iters))
+
+    collectives = dict(default.collectives)
+    measured_links = _measure_collectives(warmup, iters)
+    for dom, coeff in measured_links.items():
+        collectives[dom] = coeff
+        print(f"calib link {dom}: t0={coeff.t0_us:.2f}us "
+              f"byte={coeff.us_per_byte:.3e}")
+
+    calib = Calibration(version=CALIB_VERSION, backend=backend,
+                        source="measured", tiers=tiers,
+                        collectives=collectives)
+    path = save_calibration(calib, out)
+    print(f"calibration ({backend}, v{CALIB_VERSION}) -> {path}")
+    return calib, path
 
 
 def load(path):
@@ -54,7 +216,18 @@ def main(argv=None):
     ap.add_argument("--results", default=RESULTS)
     ap.add_argument("--file", default="baseline_single_pod.json")
     ap.add_argument("--md", action="store_true")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure cost-model coefficients and write the "
+                         "calibration cache instead of rendering rooflines")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes / sum-f32 only (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="calibration output path (default: the resolved "
+                         "$REPRO_CALIB / ~/.cache/repro/calib.json)")
     args = ap.parse_args(argv)
+    if args.calibrate:
+        calibrate(quick=args.quick, out=args.out)
+        return
     render(load(os.path.join(args.results, args.file)), md=args.md)
 
 

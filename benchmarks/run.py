@@ -20,13 +20,16 @@ import json
 import platform
 import sys
 
-from . import (bench_aggregation, bench_kernels, bench_mapreduce,
+from . import (bench_aggregation, bench_kernels, bench_mapreduce, bench_plan,
                bench_serve, bench_sketches, bench_train)
 from . import common
 
 # rows guarded by --compare: the planner-lowered hot paths + the serve tier
-GUARDED_PREFIXES = ("segment_fold", "mean_by_key", "serve_")
+GUARDED_PREFIXES = ("segment_fold", "mean_by_key", "plan_auto", "serve_")
 REGRESSION_TOLERANCE = 1.20   # fail on >20% slower than the previous artifact
+# intra-run gate: layout='auto' must stay within this factor of the BEST
+# forced layout for the same case — the cost model may not mis-place a fold
+AUTO_TOLERANCE = 1.50
 
 
 def compare_rows(new_rows, old_rows, *, tolerance: float = REGRESSION_TOLERANCE):
@@ -44,6 +47,33 @@ def compare_rows(new_rows, old_rows, *, tolerance: float = REGRESSION_TOLERANCE)
         if new_us > old[name] * tolerance:
             regressions.append((name, old[name], new_us))
     return regressions
+
+
+def check_auto_rows(rows, *, tolerance: float = AUTO_TOLERANCE):
+    """Gate the planner's auto decisions against the forced layouts.
+
+    For each ``plan_auto/<case>`` row, find the fastest
+    ``plan_forced/<case>/<layout>`` row from the SAME run; auto slower than
+    ``tolerance x best`` means the cost model chose a losing tier.  Returns
+    [(case, auto_us, best_layout, best_us), ...] violations.
+    """
+    auto, forced = {}, {}
+    for r in rows:
+        name = str(r.get("name", ""))
+        us = float(r.get("us_per_call", 0.0))
+        if name.startswith("plan_auto/"):
+            auto[name.split("/", 1)[1]] = us
+        elif name.startswith("plan_forced/"):
+            _, case, layout = name.split("/", 2)
+            forced.setdefault(case, []).append((layout, us))
+    violations = []
+    for case, auto_us in auto.items():
+        if not forced.get(case):
+            continue
+        best_layout, best_us = min(forced[case], key=lambda t: t[1])
+        if best_us > 0 and auto_us > best_us * tolerance:
+            violations.append((case, auto_us, best_layout, best_us))
+    return violations
 
 
 def main(argv=None) -> int:
@@ -72,6 +102,8 @@ def main(argv=None) -> int:
         bench_mapreduce.main()
         print("# -- aggregation layer: folds, planner tiers, grad accum, metrics --")
         bench_aggregation.main()
+        print("# -- cost-model planner: auto vs forced layouts ------------------")
+        bench_plan.main()
         print("# -- sketch monoids (paper section 3) ----------------------------")
         bench_sketches.main()
         if not args.quick:
@@ -96,6 +128,18 @@ def main(argv=None) -> int:
         print(f"# wrote {args.json} ({len(common.ROWS)} rows)")
 
     if args.compare:
+        # intra-run auto-vs-forced gate (no baseline needed): the planner's
+        # layout='auto' rows must be within AUTO_TOLERANCE of the best
+        # forced layout measured in THIS run
+        auto_violations = check_auto_rows(common.ROWS)
+        if auto_violations:
+            print(f"# PLANNER AUTO REGRESSION (> {AUTO_TOLERANCE:.2f}x best "
+                  "forced layout):")
+            for case, auto_us, best_layout, best_us in auto_violations:
+                print(f"#   plan_auto/{case}: {auto_us:.1f}us vs best forced "
+                      f"'{best_layout}' {best_us:.1f}us "
+                      f"({auto_us / best_us:.2f}x)")
+            return 1
         try:
             with open(args.compare) as f:
                 old = json.load(f)

@@ -9,6 +9,9 @@ Public API:
   execute_fold, plan_fold, Plan, segment_fold        (plan.py — the unified
     execution planner: ONE lowering path to Pallas / segment-ops / mesh
     collectives for every fold)
+  Calibration, default_calibration, load_calibration,
+    save_calibration, use_calibration                (calibration.py — the
+    measured time/byte cost model layout='auto' argmins over)
   MapReduceJob, average_by_key_job, ShuffleStats     (mapreduce.py)
 """
 from .monoid import (KernelLowering, Monoid, MonoidTypeError, Pytree,
@@ -19,6 +22,10 @@ from .monoids import REGISTRY, product
 from .aggregation import (grad_accum_fold, hierarchical_psum, local_fold,
                           monoid_allreduce, monoid_hierarchical_allreduce,
                           monoid_reduce_scatter, tree_bytes)
+from .calibration import (Calibration, TierCoeff, calibration_path,
+                          default_calibration, get_calibration,
+                          load_calibration, save_calibration,
+                          set_calibration, use_calibration)
 from .plan import (Plan, TierPlan, collective_algorithm, execute_fold,
                    plan_fold, segment_fold)
 from .mapreduce import (MapReduceJob, ShuffleStats, STRATEGIES,

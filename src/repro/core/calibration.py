@@ -1,0 +1,327 @@
+"""The calibrated time/byte cost model behind the execution planner.
+
+``plan_fold`` (core/plan.py) used to pick tiers by backend detection and
+hand-rolled byte formulas.  This module closes the ROADMAP's "measure,
+don't guess" loop: every placement decision — kernel vs segment-ops vs
+scan, reduce-scatter vs allreduce — becomes an argmin over *predicted
+microseconds*, and the coefficients behind the prediction come from
+on-device microbenchmarks (``benchmarks/roofline.py --calibrate``), the
+external-memory MapReduce cost model of Greiner & Jacob made concrete.
+
+The model, per local tier (kernel / segment_ops / scan / tree):
+
+    t(n, b) = t0_us + n * us_per_record + n * b * us_per_byte
+
+where ``n`` is the record count and ``b`` the bytes of one lifted monoid
+value — a launch-overhead term, a serial per-record term (dominant for the
+scan tier), and a throughput term.  Per collective link (ici / dcn):
+
+    t(bytes) = launches * t0_us + per_device_wire_bytes * us_per_byte
+
+Coefficients are keyed ``"{monoid}|{dtype}"`` with a fallback chain down
+to the tier-wide ``"*"`` entry, so a calibration may be as coarse (one
+number per tier) or as fine (per-(backend, dtype, monoid)) as was
+measured.
+
+Tables are cached on disk as versioned JSON — ``$REPRO_CALIB`` if set
+(the values ``none``/``off``/``default`` disable the disk cache entirely,
+which is how the test suite pins the shipped default), else
+``~/.cache/repro/calib.json``.  A table whose ``version`` does not match
+:data:`CALIB_VERSION` is stale and silently ignored in favor of the
+shipped default, so a schema change can never mis-drive the planner.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import threading
+from typing import Dict, Mapping, Optional, Tuple
+
+CALIB_VERSION = 1
+
+# tier kinds the model knows; 'segment' (the layout spelling) maps to
+# 'segment_ops' (the TierPlan.kind spelling) in plan.py
+TIER_KINDS = ("kernel", "segment_ops", "scan", "tree")
+LINK_DOMAINS = ("ici", "dcn")
+
+_ENV_VAR = "REPRO_CALIB"
+_DISABLED = ("none", "off", "default", "")
+
+
+@dataclasses.dataclass(frozen=True)
+class TierCoeff:
+    """Coefficients of one tier's (or link's) time model, in microseconds.
+
+    t0_us: fixed launch/dispatch overhead.
+    us_per_byte: inverse throughput (for links: inverse wire bandwidth).
+    us_per_record: serial per-record cost (0 for links; dominant for the
+      scan tier, whose lax.scan executes one combine per record).
+    """
+
+    t0_us: float
+    us_per_byte: float
+    us_per_record: float = 0.0
+
+    def local_us(self, num_records: int, record_bytes: int) -> float:
+        return (self.t0_us + num_records * self.us_per_record
+                + num_records * record_bytes * self.us_per_byte)
+
+    def link_us(self, wire_bytes: float, launches: int = 1) -> float:
+        return launches * self.t0_us + wire_bytes * self.us_per_byte
+
+
+def _coeff_to_json(c: TierCoeff) -> Dict[str, float]:
+    return {"t0_us": c.t0_us, "us_per_byte": c.us_per_byte,
+            "us_per_record": c.us_per_record}
+
+
+def _coeff_from_json(d: Mapping[str, float]) -> TierCoeff:
+    return TierCoeff(t0_us=float(d.get("t0_us", 0.0)),
+                     us_per_byte=float(d.get("us_per_byte", 0.0)),
+                     us_per_record=float(d.get("us_per_record", 0.0)))
+
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """A versioned table of measured (or default) cost-model coefficients.
+
+    tiers: tier kind -> {"monoid|dtype" | "monoid|*" | "*": TierCoeff}.
+    collectives: "ici" / "dcn" -> TierCoeff (us_per_record unused).
+    source: 'default' for the shipped table, 'measured' for a table written
+      by ``benchmarks/roofline.py --calibrate``.
+    """
+
+    version: int
+    backend: str
+    source: str
+    tiers: Mapping[str, Mapping[str, TierCoeff]]
+    collectives: Mapping[str, TierCoeff]
+
+    # -- lookup (specific -> generic fallback chain) -------------------------
+    def tier_coeff(self, kind: str, monoid: str = "*",
+                   dtype: str = "*") -> TierCoeff:
+        table = self.tiers.get(kind, {})
+        for key in (f"{monoid}|{dtype}", f"{monoid}|*", f"*|{dtype}", "*"):
+            if key in table:
+                return table[key]
+        return TierCoeff(0.0, 0.0, 0.0)
+
+    def link_coeff(self, domain: str) -> TierCoeff:
+        if domain in self.collectives:
+            return self.collectives[domain]
+        return _DEFAULT_COLLECTIVES.get(domain, TierCoeff(0.0, 0.0))
+
+    # -- prediction ----------------------------------------------------------
+    def predict_local_us(self, kind: str, *, monoid: str, dtype: str,
+                         num_records: int, record_bytes: int) -> float:
+        return self.tier_coeff(kind, monoid, dtype).local_us(
+            num_records, record_bytes)
+
+    def predict_link_us(self, domain: str, wire_bytes: float,
+                        launches: int = 1) -> float:
+        return self.link_coeff(domain).link_us(wire_bytes, launches)
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_json(self) -> Dict:
+        return {
+            "version": self.version,
+            "backend": self.backend,
+            "source": self.source,
+            "tiers": {k: {key: _coeff_to_json(c) for key, c in t.items()}
+                      for k, t in self.tiers.items()},
+            "collectives": {d: _coeff_to_json(c)
+                            for d, c in self.collectives.items()},
+        }
+
+    @classmethod
+    def from_json(cls, payload: Mapping) -> "Calibration":
+        return cls(
+            version=int(payload["version"]),
+            backend=str(payload.get("backend", "unknown")),
+            source=str(payload.get("source", "measured")),
+            tiers={k: {key: _coeff_from_json(c) for key, c in t.items()}
+                   for k, t in payload.get("tiers", {}).items()},
+            collectives={d: _coeff_from_json(c)
+                         for d, c in payload.get("collectives", {}).items()},
+        )
+
+
+# ---------------------------------------------------------------------------
+# the shipped default table
+# ---------------------------------------------------------------------------
+# Coefficients chosen so the UNCALIBRATED planner reproduces the historical
+# heuristic ordering on every backend: the kernel tier dominates whenever the
+# feasibility filter admits it, segment-ops beats the serial scan, and the
+# log-depth tree beats the scan for flat folds.  A measured table
+# (`roofline.py --calibrate`) replaces these with real throughputs.
+
+_DEFAULT_TIERS: Dict[str, Dict[str, TierCoeff]] = {
+    "kernel":      {"*": TierCoeff(t0_us=1.5, us_per_byte=1e-5,
+                                   us_per_record=4e-4)},
+    "segment_ops": {"*": TierCoeff(t0_us=2.0, us_per_byte=5e-5,
+                                   us_per_record=2e-3)},
+    "scan":        {"*": TierCoeff(t0_us=2.0, us_per_byte=1e-4,
+                                   us_per_record=1.5)},
+    "tree":        {"*": TierCoeff(t0_us=2.0, us_per_byte=5e-5,
+                                   us_per_record=2e-2)},
+}
+
+# ICI ~ tens of GB/s with ~10us launch; DCN ~ sub-GB/s with ~100us latency.
+_DEFAULT_COLLECTIVES: Dict[str, TierCoeff] = {
+    "ici": TierCoeff(t0_us=10.0, us_per_byte=1e-4),
+    "dcn": TierCoeff(t0_us=100.0, us_per_byte=2e-3),
+}
+
+_DEFAULT = Calibration(version=CALIB_VERSION, backend="any", source="default",
+                       tiers=_DEFAULT_TIERS, collectives=_DEFAULT_COLLECTIVES)
+
+
+def default_calibration() -> Calibration:
+    """The shipped fallback table (used when no valid cache exists)."""
+    return _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# on-disk cache
+# ---------------------------------------------------------------------------
+
+def calibration_path() -> Optional[str]:
+    """Resolve the calibration cache path.
+
+    ``$REPRO_CALIB`` wins when set; the sentinel values 'none'/'off'/
+    'default' (or empty) return None — disk disabled, shipped default only.
+    """
+    env = os.environ.get(_ENV_VAR)
+    if env is not None:
+        if env.strip().lower() in _DISABLED:
+            return None
+        return os.path.expanduser(env)
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "calib.json")
+
+
+def load_calibration(path: Optional[str] = None) -> Optional[Calibration]:
+    """Load a calibration table; None when missing, unreadable, or stale.
+
+    Staleness = ``version != CALIB_VERSION``: a table written under an old
+    schema is treated exactly like no table at all (invalidation by
+    version, never by reinterpretation).
+    """
+    path = path if path is not None else calibration_path()
+    if path is None:
+        return None
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(payload, dict):
+        return None
+    if payload.get("version") != CALIB_VERSION:
+        return None
+    try:
+        return Calibration.from_json(payload)
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def save_calibration(calib: Calibration, path: Optional[str] = None) -> str:
+    """Write ``calib`` to ``path`` (default: the resolved cache path)."""
+    path = path if path is not None else calibration_path()
+    if path is None:
+        raise ValueError(
+            f"calibration cache is disabled (${_ENV_VAR}={os.environ.get(_ENV_VAR)!r}); "
+            "pass an explicit path")
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(calib.to_json(), f, indent=1, sort_keys=True)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# the active calibration (what plan_fold consults)
+# ---------------------------------------------------------------------------
+
+_lock = threading.Lock()
+_active: Optional[Calibration] = None           # explicit override
+_cache: Tuple[Optional[Tuple[str, float]], Optional[Calibration]] = (None, None)
+
+
+def set_calibration(calib: Optional[Calibration]) -> None:
+    """Install ``calib`` as the active table (None restores env/disk/default
+    resolution)."""
+    global _active
+    with _lock:
+        _active = calib
+
+
+@contextlib.contextmanager
+def use_calibration(calib: Calibration):
+    """Scoped override — how tests inject synthetic tables."""
+    global _active
+    with _lock:
+        prev, _active = _active, calib
+    try:
+        yield calib
+    finally:
+        with _lock:
+            _active = prev
+
+
+def get_calibration() -> Calibration:
+    """The table plan_fold predicts from: explicit override > valid disk
+    cache (memoized by path + mtime) > shipped default."""
+    global _cache
+    with _lock:
+        if _active is not None:
+            return _active
+    path = calibration_path()
+    if path is None:
+        return _DEFAULT
+    try:
+        key = (path, os.path.getmtime(path))
+    except OSError:
+        return _DEFAULT
+    with _lock:
+        if _cache[0] == key and _cache[1] is not None:
+            return _cache[1]
+    loaded = load_calibration(path) or _DEFAULT
+    with _lock:
+        _cache = (key, loaded)
+    return loaded
+
+
+# ---------------------------------------------------------------------------
+# coefficient fitting (used by benchmarks/roofline.py --calibrate)
+# ---------------------------------------------------------------------------
+
+def fit_tier_coeff(*, n1: int, b1: int, t11_us: float,
+                   n2: int, t21_us: float,
+                   b2: int, t22_us: float) -> TierCoeff:
+    """Fit ``t(n, b) = t0 + n*us_per_record + n*b*us_per_byte`` from three
+    measurements: (n1, b1), (n2, b1), (n2, b2) — vary the record count at
+    fixed record bytes, then the record bytes at fixed count.  Negative
+    intermediate slopes (timing noise) clamp to 0 so a fitted table can
+    never predict negative time.
+    """
+    if n2 <= n1 or b2 <= b1:
+        raise ValueError(f"need n2 > n1 and b2 > b1; got n=({n1},{n2}) "
+                         f"b=({b1},{b2})")
+    us_per_byte = max((t22_us - t21_us) / (n2 * (b2 - b1)), 0.0)
+    slope_n = max((t21_us - t11_us) / (n2 - n1), 0.0)
+    us_per_record = max(slope_n - b1 * us_per_byte, 0.0)
+    t0 = max(t11_us - n1 * slope_n, 0.0)
+    return TierCoeff(t0_us=t0, us_per_byte=us_per_byte,
+                     us_per_record=us_per_record)
+
+
+def fit_link_coeff(*, bytes1: int, t1_us: float,
+                   bytes2: int, t2_us: float) -> TierCoeff:
+    """Fit ``t(bytes) = t0 + bytes*us_per_byte`` from two payload sizes."""
+    if bytes2 <= bytes1:
+        raise ValueError(f"need bytes2 > bytes1; got ({bytes1}, {bytes2})")
+    us_per_byte = max((t2_us - t1_us) / (bytes2 - bytes1), 0.0)
+    t0 = max(t1_us - bytes1 * us_per_byte, 0.0)
+    return TierCoeff(t0_us=t0, us_per_byte=us_per_byte)

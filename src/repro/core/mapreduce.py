@@ -37,7 +37,6 @@ import jax
 import jax.numpy as jnp
 
 from .monoid import Monoid, MonoidTypeError, Pytree, tree_fold
-from .aggregation import monoid_reduce_scatter
 from .plan import Plan, _static_valid_count, execute_fold, plan_fold
 
 STRATEGIES = ("naive", "combiner", "in_mapper")
@@ -53,6 +52,12 @@ class ShuffleStats:
     shuffle_bytes_mapreduce: shuffle_values x bytes(value) — the paper's model.
     shuffle_bytes_xla: bytes the XLA collective actually moves on this mesh
       (ring reduce-scatter for the dense table; all_gather for naive pairs).
+    shuffle_algorithm: the planner's cost-model shuffle choice
+      ('reduce_scatter' | 'allreduce'; '' when the job has no mesh combine).
+    predicted_us: the plan's modeled wall time (local tier + collectives)
+      under the active calibration.
+    measured_us: an observed wall time set by the caller via
+      :meth:`with_measured`, so modeled-vs-measured rides one record.
     """
 
     strategy: str
@@ -64,10 +69,24 @@ class ShuffleStats:
     shuffle_bytes_mapreduce: int
     shuffle_bytes_xla: int
     plan: str = ""               # the planner's tier chain (plan.describe())
+    shuffle_algorithm: str = ""
+    predicted_us: float = 0.0
+    measured_us: Optional[float] = None
 
     def reduction_vs_naive(self) -> float:
         naive = self.num_records * self.value_bytes
         return naive / max(self.shuffle_bytes_mapreduce, 1)
+
+    def with_measured(self, us: float) -> "ShuffleStats":
+        """Attach an observed wall time (microseconds) to compare against
+        ``predicted_us`` — benchmarks report the model error from this."""
+        return dataclasses.replace(self, measured_us=float(us))
+
+    def model_error(self) -> Optional[float]:
+        """measured/predicted ratio (None until both sides exist)."""
+        if self.measured_us is None or self.predicted_us <= 0:
+            return None
+        return self.measured_us / self.predicted_us
 
 
 def validate_combiner(monoid: Monoid, example_value: Pytree,
@@ -173,19 +192,26 @@ class MapReduceJob:
 
         records: globally-batched pytree, leading axis divisible by the axis
         size; each device runs the map+combine phase on its shard, then the
-        dense key table is combined across devices:
+        dense key table is combined across devices with whatever shuffle the
+        PLAN chose (``Plan.shuffle_algorithm`` — reduce-scatter + all-gather
+        when the cost model prefers it, allreduce otherwise; this method
+        makes no selection of its own):
 
           naive     -> all pairs cross the wire (all_gather), receivers fold
-          combiner / in_mapper -> psum_scatter/all_to_all of the dense table
-                                  then all_gather of per-key results
+          combiner / in_mapper -> the plan's shuffle of the dense table
 
         The result is the full (num_keys, ...) extracted table, replicated.
         """
+        from ..dist.collectives import combine_keyed_table
+
         if strategy not in STRATEGIES:
             raise ValueError(f"strategy must be one of {STRATEGIES}")
         P = mesh.shape[axis_name]
         spec = jax.sharding.PartitionSpec(axis_name)
         nospec = jax.sharding.PartitionSpec()
+        plan = self.plan(records, strategy=strategy, num_shards=P,
+                         axis_name=axis_name)
+        shuffle = plan.shuffle_algorithm or "allreduce"
 
         def shard_body(recs):
             if strategy == "naive":
@@ -199,19 +225,8 @@ class MapReduceJob:
             else:
                 local = self._local_table_combiner if strategy == "combiner" \
                     else self._local_table_in_mapper
-                table = local(recs)
-                if self.num_keys % P == 0:
-                    shard = monoid_reduce_scatter(self.monoid, table, axis_name)
-                    shard_leaves = jax.tree_util.tree_map(
-                        lambda v: jax.lax.all_gather(v, axis_name, axis=0, tiled=True),
-                        shard)
-                    table = shard_leaves
-                else:
-                    # planner collective tier: ICI-first-then-DCN allreduce
-                    table = execute_fold(
-                        self.monoid,
-                        jax.tree_util.tree_map(lambda v: v[None], table),
-                        mesh_axes=(axis_name,))
+                table = combine_keyed_table(self.monoid, local(recs),
+                                            axis_name, algorithm=shuffle)
             return table
 
         in_specs = (jax.tree_util.tree_map(lambda _: spec, records),)
@@ -228,14 +243,17 @@ class MapReduceJob:
 
     # -- accounting --------------------------------------------------------------
     def plan(self, records: Pytree, *, strategy: str,
-             num_shards: int, valid_mask=None) -> Plan:
+             num_shards: int, valid_mask=None,
+             axis_name: str = "shard") -> Plan:
         """The execution plan for this job's per-shard fold + shuffle.
 
         The plan is built from ShapeDtypeStructs (no FLOPs): one shard's
-        lifted pairs, keyed by ``num_keys``, combined across a ``shard``
-        axis of size ``num_shards``.  strategy='naive' models Algorithm 1
-        (``pre_combine=False``: raw pairs cross the wire un-combined);
-        'combiner'/'in_mapper' differ only in the local tier.
+        lifted pairs, keyed by ``num_keys``, combined across the
+        ``axis_name`` mesh axis of size ``num_shards`` (pass the real axis
+        name so :meth:`run_sharded` executes exactly this plan).
+        strategy='naive' models Algorithm 1 (``pre_combine=False``: raw
+        pairs cross the wire un-combined); 'combiner'/'in_mapper' differ
+        only in the local tier.
 
         ``valid_mask`` (one bool per record, whole job) marks padding rows
         that never become pairs; the per-shard plan uses shard 0's slice as
@@ -262,7 +280,7 @@ class MapReduceJob:
         return plan_fold(
             self.monoid, pairs, segment_ids=seg, num_segments=self.num_keys,
             valid_mask=shard_mask,
-            mesh_axes=("shard",), axis_sizes={"shard": num_shards},
+            mesh_axes=(axis_name,), axis_sizes={axis_name: num_shards},
             layout="scan" if strategy == "in_mapper" else "auto",
             pre_combine=strategy != "naive")
 
@@ -294,6 +312,8 @@ class MapReduceJob:
             shuffle_bytes_mapreduce=shuffled * vbytes,
             shuffle_bytes_xla=plan.collective_wire_bytes,
             plan=plan.describe(),
+            shuffle_algorithm=plan.shuffle_algorithm or "",
+            predicted_us=plan.predicted_us,
         )
 
 

@@ -15,9 +15,14 @@ fold — flat or keyed, local or cross-mesh — to a tiered plan:
                       ``dist/collectives.py`` (the rack-aware combiner tree).
 
 :func:`plan_fold` is the pure cost model behind it: it reports the chosen
-tier per stage and the predicted shuffle/collective bytes, so
-``mapreduce.ShuffleStats`` is derived from the plan rather than ad-hoc
-accounting.  Planning works on concrete arrays or ShapeDtypeStructs alike.
+tier per stage, the predicted shuffle/collective bytes, AND the predicted
+wall time per tier from the calibrated coefficients of
+:mod:`repro.core.calibration` — so ``layout='auto'`` is an argmin over
+predicted microseconds (backend detection is only the feasibility filter),
+the reduce-scatter-vs-allreduce shuffle choice is made here rather than in
+callers, and ``mapreduce.ShuffleStats`` is derived from the plan rather
+than ad-hoc accounting.  Planning works on concrete arrays or
+ShapeDtypeStructs alike.
 
 Kernel lowerings are registered on :class:`~repro.core.monoid.Monoid` by
 name (see ``register_kernel_lowering``); the additive and max-plus zoo
@@ -34,8 +39,16 @@ import jax.numpy as jnp
 from .monoid import (KernelLowering, Monoid, Pytree, register_kernel_lowering,
                      scan_fold, tree_fold)
 from .aggregation import _PMAX_LIKE, _PMIN_LIKE, _PSUM_LIKE, tree_bytes
+from .calibration import Calibration, get_calibration
 
 LAYOUTS = ("auto", "kernel", "segment", "scan", "tree")
+
+# layout spelling (user-facing) -> calibration tier kind (TierPlan.kind)
+_LAYOUT_TIER_KIND = {"kernel": "kernel", "segment": "segment_ops",
+                     "scan": "scan", "tree": "tree"}
+
+# TierPlan.kind values that are collective (shuffle) stages, not local folds
+_COLLECTIVE_KINDS = ("gather_pairs", "allreduce", "reduce_scatter")
 
 # monoids XLA reduces natively with a segment primitive (tier 2, fast path)
 _SEGMENT_OPS: Mapping[str, Callable] = {
@@ -138,15 +151,23 @@ class TierPlan:
     """One stage of a lowered fold.
 
     kind: 'kernel' | 'segment_ops' | 'scan' | 'tree' | 'gather_pairs' |
-          'allreduce'.
+          'allreduce' | 'reduce_scatter'.
     wire_bytes: predicted bytes this stage puts on the wire, summed over the
       participants of one reduction group (0 for on-device stages).
+    predicted_us: modeled wall time of this stage under the active
+      calibration (0 when the model has nothing to say, e.g. unknown axis
+      size).
+    candidate_us: the (candidate, predicted_us) table the planner chose
+      from — layout names for the local tier, shuffle algorithms for a
+      collective tier.  Empty for stages with no choice.
     """
 
     kind: str
     detail: str
     out_bytes: int
     wire_bytes: int = 0
+    predicted_us: float = 0.0
+    candidate_us: Tuple[Tuple[str, float], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,14 +190,48 @@ class Plan:
     @property
     def local_tier(self) -> TierPlan:
         return next(t for t in self.tiers
-                    if t.kind not in ("gather_pairs", "allreduce"))
+                    if t.kind not in _COLLECTIVE_KINDS)
 
     @property
     def collective_wire_bytes(self) -> int:
         return sum(t.wire_bytes for t in self.tiers)
 
+    @property
+    def predicted_us(self) -> float:
+        """Modeled wall time of the whole plan (local + collectives)."""
+        return float(sum(t.predicted_us for t in self.tiers))
+
+    @property
+    def candidate_us(self) -> Mapping[str, float]:
+        """Predicted microseconds per feasible local-tier layout — the table
+        ``layout='auto'`` argmins over."""
+        return dict(self.local_tier.candidate_us)
+
+    @property
+    def shuffle_algorithm(self) -> Optional[str]:
+        """'reduce_scatter' | 'allreduce' for the first collective stage
+        (None when the plan has no collective stage) — what
+        ``mapreduce.run_sharded`` executes instead of choosing itself."""
+        for t in self.tiers:
+            if t.kind in ("allreduce", "reduce_scatter"):
+                return t.kind
+        return None
+
+    @property
+    def shuffle_candidate_us(self) -> Mapping[str, float]:
+        """Predicted microseconds per shuffle algorithm on the first
+        collective axis (empty when there is none or its size is unknown)."""
+        for t in self.tiers:
+            if t.kind in ("allreduce", "reduce_scatter"):
+                return dict(t.candidate_us)
+        return {}
+
     def describe(self) -> str:
-        return " -> ".join(f"{t.kind}[{t.detail}]" for t in self.tiers)
+        parts = []
+        for t in self.tiers:
+            us = f" ~{t.predicted_us:.1f}us" if t.predicted_us > 0 else ""
+            parts.append(f"{t.kind}[{t.detail}{us}]")
+        return " -> ".join(parts)
 
 
 def collective_algorithm(m: Monoid) -> str:
@@ -194,11 +249,27 @@ def collective_wire_bytes(nbytes: int, axis_size: int, algorithm: str) -> int:
     """Total wire bytes across one reduction group of ``axis_size`` devices."""
     if axis_size <= 1:
         return 0
-    if algorithm == "ring":       # reduce-scatter + all-gather
+    if algorithm in ("ring", "reduce_scatter"):
+        # ring allreduce decomposes into the same two phases the explicit
+        # reduce-scatter + all-gather spells out: 2(P-1)/P x nbytes each
         return int(2 * nbytes * (axis_size - 1))
     if algorithm == "gather":     # every device replicates its value P-1 times
         return int(nbytes * (axis_size - 1) * axis_size)
     raise ValueError(algorithm)
+
+
+def _per_device_shuffle_bytes(nbytes: int, axis_size: int, shuffle_kind: str,
+                              allreduce_algo: str) -> float:
+    """Wire bytes ONE device moves for a table shuffle — the quantity the
+    link-time model prices.  reduce_scatter scatters then gathers 1/P shards
+    (2(P-1)/P x nbytes) for any monoid; allreduce matches that for the
+    psum/pmax-family ('ring') but degrades to a full (P-1) x nbytes gather
+    for generic monoids."""
+    if axis_size <= 1:
+        return 0.0
+    if shuffle_kind == "reduce_scatter" or allreduce_algo == "ring":
+        return 2.0 * nbytes * (axis_size - 1) / axis_size
+    return float(nbytes) * (axis_size - 1)
 
 
 def _split_ici_dcn(mesh_axes: Sequence[Any]) -> Tuple[Tuple, Tuple]:
@@ -272,14 +343,28 @@ def _mask_segment_ids(segment_ids: jnp.ndarray, valid_mask,
                      num_segments)
 
 
-def _kernel_compatible(m: Monoid, value_shape: Pytree) -> bool:
+def _kernel_infeasible_reason(m: Monoid, value_shape: Pytree) -> Optional[str]:
+    """Why the kernel tier cannot lower this fold — None when it can.
+
+    The returned text names the offending leaf (tree path) and its dtype,
+    so a forced ``layout='kernel'`` fails at PLAN time with an actionable
+    message instead of deep inside the Pallas lowering."""
     if m.kernel_lowering() is None:
-        return False
-    for leaf in jax.tree_util.tree_leaves(value_shape):
+        return (f"monoid {m.name!r} has no registered Pallas kernel lowering "
+                "(see register_kernel_lowering)")
+    leaves, _ = jax.tree_util.tree_flatten_with_path(value_shape)
+    for path, leaf in leaves:
         if not (jnp.issubdtype(leaf.dtype, jnp.floating)
                 or jnp.issubdtype(leaf.dtype, jnp.integer)):
-            return False
-    return True
+            where = jax.tree_util.keystr(path) or "<value>"
+            return (f"value leaf {where!r} has dtype "
+                    f"{jnp.dtype(leaf.dtype).name}, which the Pallas "
+                    "segment-fold kernel cannot lower (float/int leaves only)")
+    return None
+
+
+def _kernel_compatible(m: Monoid, value_shape: Pytree) -> bool:
+    return _kernel_infeasible_reason(m, value_shape) is None
 
 
 def _kernel_exact(value_shape: Pytree, num_records: int) -> bool:
@@ -305,6 +390,52 @@ def _kernel_exact(value_shape: Pytree, num_records: int) -> bool:
     return True
 
 
+def _link_domain(ax: Any) -> str:
+    """'dcn' for axes wired over DCN (dist.collectives.DCN_AXIS_NAMES),
+    'ici' otherwise — the calibration's two link classes."""
+    _, dcn = _split_ici_dcn((ax,))
+    return "dcn" if dcn else "ici"
+
+
+def _plan_collective_tier(calib: Calibration, label: str, ax: Any,
+                          P: Optional[int], nbytes: int,
+                          num_segments: Optional[int],
+                          allreduce_algo: str) -> TierPlan:
+    """One collective stage, its shuffle algorithm chosen by predicted cost.
+
+    Candidates: 'reduce_scatter' (keyed tables whose key count divides the
+    axis size — each device reduces one key shard, then all-gathers: the
+    MapReduce shuffle proper) and 'allreduce' (ring for the psum/pmax
+    family, gather + on-device fold for generic monoids).  Argmin over the
+    calibrated link model; a predicted tie prefers reduce_scatter because
+    it distributes the per-key reduce work across the group.  An unknown
+    or trivial axis size plans a 0-cost allreduce (today's behavior).
+    """
+    candidates = ["allreduce"]
+    if num_segments is not None and P and P > 1 and num_segments % P == 0:
+        candidates.insert(0, "reduce_scatter")   # ties prefer reduce_scatter
+    if not P or P <= 1:
+        wire = collective_wire_bytes(nbytes, P, allreduce_algo) if P else 0
+        return TierPlan("allreduce",
+                        f"{label}:{ax} {allreduce_algo}"
+                        + ("" if P else " (size unknown)"),
+                        nbytes, wire)
+    cand_us = tuple(
+        (kind, calib.predict_link_us(
+            label, _per_device_shuffle_bytes(nbytes, P, kind, allreduce_algo)))
+        for kind in candidates)
+    costs = dict(cand_us)
+    kind = min(candidates, key=costs.get)
+    if kind == "reduce_scatter":
+        return TierPlan("reduce_scatter",
+                        f"{label}:{ax} reduce_scatter+all_gather",
+                        nbytes, collective_wire_bytes(nbytes, P, kind),
+                        predicted_us=costs[kind], candidate_us=cand_us)
+    return TierPlan("allreduce", f"{label}:{ax} {allreduce_algo}",
+                    nbytes, collective_wire_bytes(nbytes, P, allreduce_algo),
+                    predicted_us=costs[kind], candidate_us=cand_us)
+
+
 def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
               num_segments: Optional[int] = None,
               valid_mask=None,
@@ -313,13 +444,23 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
               map_fn: Optional[Callable] = None,
               mesh: Optional[jax.sharding.Mesh] = None,
               axis_sizes: Optional[Mapping[Any, int]] = None,
-              pre_combine: bool = True, block_n: int = 512) -> Plan:
+              pre_combine: bool = True, block_n: int = 512,
+              calibration: Optional[Calibration] = None) -> Plan:
     """Lower a fold to a tiered :class:`Plan` without executing it.
 
     ``values`` may be concrete arrays or ShapeDtypeStructs — planning costs
     no FLOPs.  ``pre_combine=False`` models the paper's Algorithm 1 (no
     combiner: raw pairs cross the wire, receivers fold) purely for byte
     accounting; :func:`execute_fold` refuses to run such plans.
+
+    ``layout='auto'`` is an argmin over predicted microseconds from the
+    active :class:`~repro.core.calibration.Calibration` (override with
+    ``calibration=``): backend detection and dtype checks only decide which
+    tiers are FEASIBLE; the calibrated time model decides which feasible
+    tier wins.  The same model chooses reduce-scatter vs allreduce per
+    collective axis (``Plan.shuffle_algorithm``).  A forced ``layout=``
+    that is infeasible for the inputs raises at plan time with the
+    offending leaf dtype named.
 
     ``valid_mask`` (one bool per record) makes the fold ragged: invalid rows
     contribute the monoid identity on every tier, and — when the mask is
@@ -349,57 +490,93 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
     out_bytes = (num_segments * vbytes) if keyed else vbytes
     masked = " +mask" if valid_mask is not None else ""
 
-    # -- local tier ---------------------------------------------------------
+    calib = calibration if calibration is not None else get_calibration()
+    leaves = jax.tree_util.tree_leaves(value_shape)
+    dtype_key = jnp.dtype(leaves[0].dtype).name if leaves else "*"
+
+    def local_us(layout_name: str) -> float:
+        # every tier touches all n rows (masked rows still flow through the
+        # kernel/scatter/scan); only the SHUFFLE byte model is ragged-aware
+        return calib.predict_local_us(
+            _LAYOUT_TIER_KIND[layout_name], monoid=m.name, dtype=dtype_key,
+            num_records=n, record_bytes=vbytes)
+
+    # -- local tier: feasibility filter, then argmin over predicted cost ----
     if keyed:
         if layout == "tree":
             raise ValueError("layout='tree' is a flat-fold layout; keyed "
                              "folds use kernel/segment/scan")
-        kind = layout
-        if layout == "auto":
-            if (_kernel_compatible(m, value_shape)
-                    and _kernel_exact(value_shape, n_model)
-                    and jax.default_backend() == "tpu"):
-                kind = "kernel"
-            elif m.name in _SEGMENT_OPS:
-                kind = "segment"
-            else:
-                kind = "scan"
+        kernel_reason = _kernel_infeasible_reason(m, value_shape)
+        candidates = []
+        # feasibility only: the kernel tier needs a registered lowering with
+        # compatible dtypes, an exact accumulator, and the TPU backend —
+        # WHICH feasible tier runs is the cost model's call below
+        if (kernel_reason is None and _kernel_exact(value_shape, n_model)
+                and jax.default_backend() == "tpu"):
+            candidates.append("kernel")
+        if m.name in _SEGMENT_OPS:
+            candidates.append("segment")
+        candidates.append("scan")
+        shown = candidates + ([layout] if layout not in ("auto", *candidates)
+                              else [])
+        candidate_us = tuple((c, local_us(c)) for c in shown)
+        costs = dict(candidate_us)
+        kind = (min(candidates, key=costs.get) if layout == "auto"
+                else layout)
         if kind == "kernel":
-            if not _kernel_compatible(m, value_shape):
+            if kernel_reason is not None:
                 raise ValueError(
-                    f"monoid {m.name!r} has no compatible kernel lowering")
+                    f"layout='kernel' was requested but is infeasible: "
+                    f"{kernel_reason}. Use layout='segment' or "
+                    "layout='scan', or leave layout='auto' to let the cost "
+                    "model pick among feasible tiers.")
             low = m.kernel_lowering()
             local = TierPlan("kernel",
                              f"pallas segment_fold[{low.semiring}] "
-                             f"block_n={block_n}{masked}", out_bytes)
+                             f"block_n={block_n}{masked}", out_bytes,
+                             predicted_us=costs["kernel"],
+                             candidate_us=candidate_us)
         elif kind == "segment":
             op = _SEGMENT_OPS.get(m.name)
             if op is None:
                 raise ValueError(
-                    f"monoid {m.name!r} has no XLA segment primitive")
+                    f"layout='segment' was requested but monoid {m.name!r} "
+                    "has no XLA segment primitive (jax.ops.segment_*); use "
+                    "layout='scan', or leave layout='auto' to let the cost "
+                    "model pick among feasible tiers.")
             local = TierPlan("segment_ops", f"jax.ops.{op.__name__}{masked}",
-                             out_bytes)
+                             out_bytes, predicted_us=costs["segment"],
+                             candidate_us=candidate_us)
         else:
             local = TierPlan("scan",
                              f"serial scan (any monoid, Alg 4){masked}",
-                             out_bytes)
+                             out_bytes, predicted_us=costs["scan"],
+                             candidate_us=candidate_us)
     else:
-        kind = layout
         if layout in ("kernel", "segment"):
             raise ValueError(
                 f"layout={layout!r} lowers a KEYED fold but no segment_ids= "
                 "were given: pass segment_ids= (one key per record) and "
                 "num_segments=, or use layout='tree'/'scan' for a flat fold")
-        if layout == "auto":
-            kind = "scan" if map_fn is not None else "tree"
+        # with map_fn the point is O(1) live values — materializing for the
+        # tree tier would defeat it, so auto considers the fused scan only
+        candidates = ["scan"] if map_fn is not None else ["tree", "scan"]
+        shown = candidates + ([layout] if layout not in ("auto", *candidates)
+                              else [])
+        candidate_us = tuple((c, local_us(c)) for c in shown)
+        costs = dict(candidate_us)
+        kind = (min(candidates, key=costs.get) if layout == "auto"
+                else layout)
         if kind == "tree":
             local = TierPlan("tree",
                              f"log-depth tree fold (Alg 3 combiner){masked}",
-                             out_bytes)
+                             out_bytes, predicted_us=costs["tree"],
+                             candidate_us=candidate_us)
         else:
             local = TierPlan("scan",
                              f"in-mapper scan (Alg 4, O(1) live){masked}",
-                             out_bytes)
+                             out_bytes, predicted_us=costs["scan"],
+                             candidate_us=candidate_us)
 
     # -- collective tiers: ICI first, then DCN ------------------------------
     sizes = dict(axis_sizes or {})
@@ -413,9 +590,14 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
         pair_bytes = n_model * vbytes
         wire = sum(collective_wire_bytes(pair_bytes, sizes.get(ax, 1),
                                          "gather") for ax in (mesh_axes or ()))
+        pred = sum(
+            calib.predict_link_us(_link_domain(ax),
+                                  float(pair_bytes) * (sizes[ax] - 1))
+            for ax in (mesh_axes or ())
+            if sizes.get(ax) and sizes[ax] > 1)
         tiers.append(TierPlan("gather_pairs",
                               "no combiner: all pairs shuffled (Alg 1)",
-                              pair_bytes, wire))
+                              pair_bytes, wire, predicted_us=float(pred)))
         tiers.append(local)
     else:
         tiers.append(local)
@@ -423,13 +605,9 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
             ici, dcn = _split_ici_dcn(mesh_axes)
             for group, label in ((ici, "ici"), (dcn, "dcn")):
                 for ax in group:
-                    P = sizes.get(ax)
-                    wire = collective_wire_bytes(out_bytes, P, algo) if P else 0
-                    tiers.append(TierPlan(
-                        "allreduce",
-                        f"{label}:{ax} {algo}"
-                        + ("" if P else " (size unknown)"),
-                        out_bytes, wire))
+                    tiers.append(_plan_collective_tier(
+                        calib, label, ax, sizes.get(ax), out_bytes,
+                        num_segments if keyed else None, algo))
     return Plan(monoid=m, tiers=tuple(tiers), num_records=n,
                 num_segments=num_segments, value_bytes=vbytes,
                 out_bytes=out_bytes, num_valid=num_valid)
@@ -548,6 +726,7 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
                  block_n: int = 512, interpret: Optional[bool] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  axis_sizes: Optional[Mapping[Any, int]] = None,
+                 calibration: Optional[Calibration] = None,
                  with_plan: bool = False) -> Pytree:
     """Fold monoid values through the planner-chosen tiers.
 
@@ -564,9 +743,11 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
     the one-hot / the XLA scatter), the generic tiers fold the identity.
     The result equals the fold over only the valid rows.
 
-    layout: 'auto' picks the kernel tier on TPU when the monoid has a
-    registered Pallas lowering, else segment-ops, else the generic scan;
-    'kernel' / 'segment' / 'scan' / 'tree' force a tier.  ``map_fn`` maps
+    layout: 'auto' argmins the calibrated cost model over the feasible
+    tiers (see :func:`plan_fold`); 'kernel' / 'segment' / 'scan' / 'tree'
+    force a tier.  The plan also carries the shuffle-algorithm choice per
+    collective axis, and the keyed mesh combine executes exactly what the
+    plan says (reduce-scatter + all-gather or allreduce).  ``map_fn`` maps
     raw inputs (then ``m.lift``) without materializing them on scan tiers —
     the in-mapper combining of Algorithm 4.  ``lifted=False`` applies
     ``m.lift`` to each element first.
@@ -585,7 +766,8 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
                      num_segments=num_segments, valid_mask=plan_mask,
                      mesh_axes=mesh_axes,
                      layout=layout, lifted=lifted, map_fn=map_fn, mesh=mesh,
-                     axis_sizes=axis_sizes, block_n=block_n)
+                     axis_sizes=axis_sizes, block_n=block_n,
+                     calibration=calibration)
     kind = plan.local_tier.kind
     keyed = segment_ids is not None
     if valid_mask is not None and axis != 0:
@@ -630,8 +812,19 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
             out = scan_fold(m, mat, axis=axis)
 
     if mesh_axes:
-        from ..dist.collectives import cross_axes_allreduce
-        out = cross_axes_allreduce(m, out, mesh_axes)
+        from ..dist.collectives import (combine_keyed_table,
+                                        cross_axes_allreduce,
+                                        split_axis_names)
+        coll = [t for t in plan.tiers
+                if t.kind in ("allreduce", "reduce_scatter")]
+        if keyed and any(t.kind == "reduce_scatter" for t in coll):
+            # execute the plan's per-axis shuffle choice: axis order here
+            # (ICI then DCN) matches the planner's tier order by construction
+            ici, dcn = split_axis_names(mesh_axes)
+            for ax, tier in zip(tuple(ici) + tuple(dcn), coll):
+                out = combine_keyed_table(m, out, ax, algorithm=tier.kind)
+        else:
+            out = cross_axes_allreduce(m, out, mesh_axes)
     return (out, plan) if with_plan else out
 
 

@@ -14,10 +14,12 @@ from __future__ import annotations
 
 from typing import Any, Optional, Sequence, Tuple
 
+import jax
 from jax.sharding import Mesh
 
 from ..core.aggregation import (hierarchical_psum, monoid_allreduce,
-                                monoid_hierarchical_allreduce)
+                                monoid_hierarchical_allreduce,
+                                monoid_reduce_scatter)
 from ..core.monoid import Monoid, Pytree
 from ..core import monoids
 
@@ -69,6 +71,28 @@ def cross_axes_allreduce(m: Monoid, x: Pytree, axes: Sequence[Any]) -> Pytree:
     and reduced fast-first."""
     ici, dcn = split_axis_names(axes)
     return monoid_hierarchical_allreduce(m, x, ici + dcn)
+
+
+def combine_keyed_table(m: Monoid, table: Pytree, axis_name: Any, *,
+                        algorithm: str = "allreduce") -> Pytree:
+    """Combine a keyed (num_segments, ...) monoid table across ONE mesh axis
+    with the shuffle algorithm the planner chose (``Plan.shuffle_algorithm``).
+
+    'allreduce' — :func:`monoid_allreduce` (ring for the psum/pmax family,
+    gather + on-device fold for generic monoids).  'reduce_scatter' — the
+    MapReduce shuffle proper: each device combines its 1/P key shard
+    (``monoid_reduce_scatter``), then the shards are all-gathered back so
+    every device holds the full table; requires ``num_segments % P == 0``,
+    which the planner guarantees before choosing it.  Must run inside
+    shard_map over ``axis_name``.
+    """
+    if algorithm == "allreduce":
+        return monoid_allreduce(m, table, axis_name)
+    if algorithm != "reduce_scatter":
+        raise ValueError(f"unknown shuffle algorithm {algorithm!r}")
+    shard = monoid_reduce_scatter(m, table, axis_name)
+    return jax.tree_util.tree_map(
+        lambda v: jax.lax.all_gather(v, axis_name, axis=0, tiled=True), shard)
 
 
 def grad_sync(grads: Pytree, mesh: Mesh,

@@ -5,3 +5,9 @@ import sys
 # smoke tests and benches must see 1 device (the 512-device placeholder mesh
 # exists only inside launch/dryrun.py and the subprocess distributed tests).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Pin the planner to the SHIPPED default cost-model table: a developer's
+# ~/.cache/repro/calib.json (measured on their machine) must not flip the
+# tier choices the suite asserts.  Tests that exercise the disk cache set
+# REPRO_CALIB themselves (monkeypatch / subprocess env).
+os.environ.setdefault("REPRO_CALIB", "default")

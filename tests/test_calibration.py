@@ -1,0 +1,180 @@
+"""The calibrated cost model: cache round-trip, stale-version invalidation,
+the coefficient fallback chain, and the microbenchmark fitting math."""
+import json
+
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import monoids, plan_fold
+from repro.core.calibration import (CALIB_VERSION, Calibration, TierCoeff,
+                                    calibration_path, default_calibration,
+                                    fit_link_coeff, fit_tier_coeff,
+                                    get_calibration, load_calibration,
+                                    save_calibration, use_calibration)
+
+
+def _synthetic(scan_cheap=False):
+    """A table that inverts the default ordering when scan_cheap is set."""
+    fast = TierCoeff(t0_us=0.1, us_per_byte=1e-7, us_per_record=1e-6)
+    slow = TierCoeff(t0_us=50.0, us_per_byte=1e-2, us_per_record=1.0)
+    return Calibration(
+        version=CALIB_VERSION, backend="test", source="measured",
+        tiers={"kernel": {"*": slow},
+               "segment_ops": {"*": fast if not scan_cheap else slow},
+               "scan": {"*": slow if not scan_cheap else fast},
+               "tree": {"*": fast}},
+        collectives={"ici": TierCoeff(5.0, 1e-4),
+                     "dcn": TierCoeff(50.0, 1e-3)})
+
+
+# -- cache round-trip --------------------------------------------------------
+
+def test_cache_round_trip_identical_plans(tmp_path):
+    """write -> load -> the loaded table drives plan_fold to the SAME tier
+    choices and predicted times as the in-memory original."""
+    calib = _synthetic(scan_cheap=True)
+    path = save_calibration(calib, str(tmp_path / "calib.json"))
+    loaded = load_calibration(path)
+    assert loaded is not None
+    assert loaded.to_json() == calib.to_json()
+
+    vals = jnp.ones((64, 4), jnp.float32)
+    segs = jnp.zeros((64,), jnp.int32)
+    kw = dict(segment_ids=segs, num_segments=16, mesh_axes=("data",),
+              axis_sizes={"data": 8})
+    p1 = plan_fold(monoids.sum_, vals, calibration=calib, **kw)
+    p2 = plan_fold(monoids.sum_, vals, calibration=loaded, **kw)
+    assert [t.kind for t in p1.tiers] == [t.kind for t in p2.tiers]
+    assert p1.predicted_us == pytest.approx(p2.predicted_us)
+    assert p1.candidate_us == p2.candidate_us
+    # the synthetic table made scan cheaper than segment-ops: the planner
+    # must follow the table, not the default heuristic ordering
+    assert p1.local_tier.kind == "scan"
+
+
+def test_get_calibration_resolves_disk_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "calib.json")
+    save_calibration(_synthetic(), path)
+    monkeypatch.setenv("REPRO_CALIB", path)
+    active = get_calibration()
+    assert active.source == "measured"
+    assert active.backend == "test"
+
+
+# -- stale-version invalidation ---------------------------------------------
+
+def test_stale_version_is_invalidated(tmp_path, monkeypatch):
+    """A table written under any other schema version is treated exactly
+    like no table: load returns None, the planner gets the shipped default."""
+    path = str(tmp_path / "calib.json")
+    payload = _synthetic().to_json()
+    payload["version"] = CALIB_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    assert load_calibration(path) is None
+    monkeypatch.setenv("REPRO_CALIB", path)
+    assert get_calibration().source == "default"
+
+
+def test_corrupt_cache_is_invalidated(tmp_path):
+    path = tmp_path / "calib.json"
+    path.write_text("{not json")
+    assert load_calibration(str(path)) is None
+    assert load_calibration(str(tmp_path / "missing.json")) is None
+
+
+def test_env_sentinels_disable_disk(monkeypatch):
+    for sentinel in ("none", "off", "default", ""):
+        monkeypatch.setenv("REPRO_CALIB", sentinel)
+        assert calibration_path() is None
+        assert get_calibration().source == "default"
+    monkeypatch.setenv("REPRO_CALIB", "none")
+    with pytest.raises(ValueError):
+        save_calibration(_synthetic())
+
+
+def test_use_calibration_scoped_override():
+    calib = _synthetic()
+    with use_calibration(calib) as active:
+        assert get_calibration() is calib is active
+    assert get_calibration() is not calib
+
+
+# -- the coefficient fallback chain -----------------------------------------
+
+def test_tier_coeff_fallback_chain():
+    specific = TierCoeff(1.0, 1.0, 1.0)
+    by_monoid = TierCoeff(2.0, 2.0, 2.0)
+    by_dtype = TierCoeff(3.0, 3.0, 3.0)
+    generic = TierCoeff(4.0, 4.0, 4.0)
+    calib = Calibration(
+        version=CALIB_VERSION, backend="t", source="measured",
+        tiers={"scan": {"sum|float32": specific, "sum|*": by_monoid,
+                        "*|float32": by_dtype, "*": generic}},
+        collectives={})
+    assert calib.tier_coeff("scan", "sum", "float32") is specific
+    assert calib.tier_coeff("scan", "sum", "int32") is by_monoid
+    assert calib.tier_coeff("scan", "max", "float32") is by_dtype
+    assert calib.tier_coeff("scan", "max", "int8") is generic
+    # an unknown tier kind predicts 0, never crashes
+    assert calib.tier_coeff("nope").local_us(10, 10) == 0.0
+    # unmeasured link domains fall back to the shipped defaults
+    assert calib.link_coeff("dcn").t0_us == \
+        default_calibration().link_coeff("dcn").t0_us
+
+
+# -- fitting -----------------------------------------------------------------
+
+def test_fit_tier_coeff_recovers_exact_model():
+    true = TierCoeff(t0_us=3.0, us_per_byte=2e-4, us_per_record=5e-2)
+    n1, n2, b1, b2 = 100, 1000, 16, 256
+    fitted = fit_tier_coeff(
+        n1=n1, b1=b1, t11_us=true.local_us(n1, b1),
+        n2=n2, t21_us=true.local_us(n2, b1),
+        b2=b2, t22_us=true.local_us(n2, b2))
+    assert fitted.t0_us == pytest.approx(true.t0_us, rel=1e-6)
+    assert fitted.us_per_byte == pytest.approx(true.us_per_byte, rel=1e-6)
+    assert fitted.us_per_record == pytest.approx(true.us_per_record, rel=1e-6)
+
+
+def test_fit_clamps_noise_to_nonnegative():
+    # timings that DECREASE with size (pure noise) must not fit negative
+    # slopes — a fitted table may never predict negative microseconds
+    c = fit_tier_coeff(n1=10, b1=4, t11_us=100.0, n2=100, t21_us=50.0,
+                       b2=64, t22_us=40.0)
+    assert c.t0_us >= 0 and c.us_per_byte >= 0 and c.us_per_record >= 0
+    assert c.local_us(10_000, 1024) >= 0
+    link = fit_link_coeff(bytes1=100, t1_us=50.0, bytes2=1000, t2_us=10.0)
+    assert link.t0_us >= 0 and link.us_per_byte >= 0
+    with pytest.raises(ValueError):
+        fit_tier_coeff(n1=10, b1=4, t11_us=1, n2=10, t21_us=1, b2=8, t22_us=1)
+    with pytest.raises(ValueError):
+        fit_link_coeff(bytes1=8, t1_us=1, bytes2=8, t2_us=1)
+
+
+# -- the quick calibration harness end-to-end --------------------------------
+
+def test_roofline_calibrate_quick_produces_loadable_table(tmp_path):
+    """The CI smoke path: --calibrate --quick writes a versioned table the
+    planner can consume (merged over the shipped defaults)."""
+    import importlib
+    roofline = importlib.import_module("benchmarks.roofline")
+    out = str(tmp_path / "calib.json")
+    calib, path = roofline.calibrate(quick=True, out=out)
+    assert path == out
+    loaded = load_calibration(out)
+    assert loaded is not None and loaded.source == "measured"
+    assert loaded.backend == jax.default_backend()
+    # measured entries exist for the quick zoo...
+    assert "sum|float32" in loaded.tiers["segment_ops"]
+    assert "sum|float32" in loaded.tiers["scan"]
+    # ...and every tier still has a generic entry (merged over defaults)
+    for kind in ("kernel", "segment_ops", "scan", "tree"):
+        assert "*" in loaded.tiers[kind]
+    # the measured table drives a plan without error
+    p = plan_fold(monoids.sum_, jnp.ones((32, 2), jnp.float32),
+                  segment_ids=jnp.zeros((32,), jnp.int32), num_segments=4,
+                  calibration=loaded)
+    assert p.predicted_us > 0

@@ -43,6 +43,57 @@ print("ok")
 """)
 
 
+def test_sharded_mapreduce_executes_plan_shuffle():
+    """run_sharded consumes the PLAN's shuffle choice (no selection of its
+    own): divisible key counts still lower to reduce-scatter (the pre-plan
+    special case, now a cost-model decision), non-divisible to allreduce —
+    and both give the oracle answer on a real 8-device mesh."""
+    run_distributed(PRELUDE + """
+from repro.core import average_by_key_job
+rng = np.random.default_rng(4)
+for num_keys in (16, 13):    # 16 % 8 == 0 -> reduce_scatter; 13 -> allreduce
+    keys = rng.integers(0, num_keys, 128)
+    vals = rng.normal(size=128).astype(np.float32)
+    records = {"key": jnp.asarray(keys), "value": jnp.asarray(vals)}
+    job = average_by_key_job(num_keys)
+    plan = job.plan(records, strategy="combiner", num_shards=8,
+                    axis_name="data")
+    want_algo = "reduce_scatter" if num_keys % 8 == 0 else "allreduce"
+    assert plan.shuffle_algorithm == want_algo, (num_keys, plan.describe())
+    stats = job.stats(records, strategy="combiner", num_shards=8)
+    assert stats.shuffle_algorithm == want_algo
+    assert stats.predicted_us > 0
+    oracle = np.array([vals[keys==k].mean() if (keys==k).any() else 0.0
+                       for k in range(num_keys)])
+    for strat in ("combiner", "in_mapper"):
+        out = np.asarray(job.run_sharded(records, mesh, strategy=strat))
+        assert np.allclose(out, oracle, atol=1e-5), (num_keys, strat)
+print("ok")
+""")
+
+
+def test_combine_keyed_table_both_algorithms():
+    """combine_keyed_table('reduce_scatter') == combine_keyed_table(
+    'allreduce') == the replicated sum, inside a real shard_map."""
+    run_distributed(PRELUDE + """
+from repro.core import monoids
+from repro.dist.collectives import combine_keyed_table
+rng = np.random.default_rng(5)
+table = jnp.asarray(rng.normal(size=(8, 16, 3)).astype(np.float32))
+want = np.asarray(table).sum(0)
+spec = jax.sharding.PartitionSpec("data")
+for algo in ("allreduce", "reduce_scatter"):
+    fn = jax.shard_map(
+        lambda t, algo=algo: combine_keyed_table(monoids.sum_, t[0], "data",
+                                                 algorithm=algo),
+        mesh=mesh, in_specs=(spec,),
+        out_specs=jax.sharding.PartitionSpec(), check_vma=False)
+    out = np.asarray(fn(table))       # per-device slice (1, 16, 3) -> t[0]
+    assert np.allclose(out, want, atol=1e-5), algo
+print("ok")
+""")
+
+
 def test_hierarchical_psum_equals_flat():
     run_distributed(PRELUDE + """
 from repro.core.aggregation import hierarchical_psum

@@ -406,13 +406,23 @@ def test_plan_reports_tiers_and_collective_bytes():
                   axis_sizes={"data": 8, "pod": 2})
     kinds = [t.kind for t in p.tiers]
     assert kinds[0] in ("kernel", "segment_ops")
-    assert kinds[1:] == ["allreduce", "allreduce"]
+    # 16 keys divide both axis sizes: the cost model picks the key-sharded
+    # reduce-scatter shuffle on both axes (same wire bytes as the ring,
+    # ties prefer distributing the per-key reduce)
+    assert kinds[1:] == ["reduce_scatter", "reduce_scatter"]
     assert "ici:data" in p.tiers[1].detail          # fast axis first...
     assert "dcn:pod" in p.tiers[2].detail           # ...slow pod axis last
     table_bytes = 16 * 4 * 4
     assert p.out_bytes == table_bytes
-    assert p.tiers[1].wire_bytes == 2 * table_bytes * (8 - 1)   # ring
+    assert p.tiers[1].wire_bytes == 2 * table_bytes * (8 - 1)   # ring-equal
     assert p.tiers[2].wire_bytes == 2 * table_bytes * (2 - 1)
+    assert p.shuffle_algorithm == "reduce_scatter"
+    assert p.predicted_us > 0
+    # 13 keys don't divide either axis: allreduce is the only candidate
+    p13 = plan_fold(monoids.sum_, pairs, segment_ids=segs, num_segments=13,
+                    mesh_axes=("pod", "data"),
+                    axis_sizes={"data": 8, "pod": 2})
+    assert [t.kind for t in p13.tiers][1:] == ["allreduce", "allreduce"]
 
     # generic monoids can't ring-reduce: the planner predicts gather bytes
     assert collective_algorithm(monoids.sum_) == "ring"
@@ -490,3 +500,173 @@ def test_mesh_tier_single_device():
                         check_vma=False)(vals)
     np.testing.assert_allclose(np.asarray(out), np.asarray(vals.sum(0)),
                                rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the calibrated cost model: auto == argmin, shuffle choice, forced errors
+# ---------------------------------------------------------------------------
+
+def _winner_calibration(winner_layout):
+    """A synthetic table making exactly one layout's tier cheap."""
+    from repro.core.calibration import CALIB_VERSION, Calibration, TierCoeff
+    from repro.core.plan import _LAYOUT_TIER_KIND
+
+    cheap = TierCoeff(t0_us=0.01, us_per_byte=1e-9, us_per_record=1e-9)
+    dear = TierCoeff(t0_us=1e4, us_per_byte=1.0, us_per_record=1.0)
+    win = _LAYOUT_TIER_KIND[winner_layout]
+    return Calibration(
+        version=CALIB_VERSION, backend="test", source="measured",
+        tiers={kind: {"*": cheap if kind == win else dear}
+               for kind in ("kernel", "segment_ops", "scan", "tree")},
+        collectives={"ici": TierCoeff(1.0, 1e-5),
+                     "dcn": TierCoeff(10.0, 1e-3)})
+
+
+@settings(max_examples=24, deadline=None)
+@given(name=st.sampled_from(["sum", "max", "min", "count", "mean",
+                             "bitwise_or"]),
+       winner=st.sampled_from(KEYED_LAYOUTS),
+       on_tpu=st.booleans())
+def test_auto_is_argmin_of_predicted_cost(name, winner, on_tpu):
+    """layout='auto' == argmin over the plan's own candidate_us table for
+    every keyed zoo monoid, under ANY injected calibration — backend/dtype
+    checks only filter feasibility, the cost model decides the winner."""
+    from unittest import mock
+
+    from repro.core import plan as plan_mod
+    from repro.core.plan import _LAYOUT_TIER_KIND
+
+    rng = np.random.default_rng(7)
+    m, values = _keyed_samples(name, 32, 3, rng)
+    segs = jnp.asarray(rng.integers(0, 4, 32).astype(np.int32))
+    calib = _winner_calibration(winner)
+    backend = "tpu" if on_tpu else "cpu"
+    with mock.patch.object(plan_mod.jax, "default_backend",
+                           return_value=backend):
+        p = plan_fold(m, values, segment_ids=segs, num_segments=4,
+                      calibration=calib)
+    cand = p.candidate_us
+    assert cand, "auto plans must report their candidate table"
+    best = min(cand, key=cand.get)
+    assert p.local_tier.kind == _LAYOUT_TIER_KIND[best]
+    assert p.local_tier.predicted_us == pytest.approx(cand[best])
+    # kernel may only ever appear as a candidate on the TPU backend
+    if not on_tpu:
+        assert "kernel" not in cand
+
+
+def test_auto_follows_injected_calibration_not_heuristics(monkeypatch):
+    """Flip the table and the choice flips: scan-cheap beats segment-ops
+    even for a monoid with a native segment primitive."""
+    rng = np.random.default_rng(3)
+    vals = jnp.asarray(rng.normal(size=(64, 4)).astype(np.float32))
+    segs = jnp.asarray(rng.integers(0, 8, 64).astype(np.int32))
+    p_scan = plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=8,
+                       calibration=_winner_calibration("scan"))
+    assert p_scan.local_tier.kind == "scan"
+    p_seg = plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=8,
+                      calibration=_winner_calibration("segment"))
+    assert p_seg.local_tier.kind == "segment_ops"
+
+
+def test_shuffle_choice_reduce_scatter_when_keys_divide():
+    """Divisible key count -> the cost model picks the key-sharded
+    reduce-scatter shuffle (ties break toward it; for gather-fallback
+    monoids it is strictly cheaper). Non-divisible -> allreduce only."""
+    vals = jax.ShapeDtypeStruct((128, 4), jnp.float32)
+    segs = jax.ShapeDtypeStruct((128,), jnp.int32)
+    kw = dict(mesh_axes=("data",), axis_sizes={"data": 8})
+    p = plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=16, **kw)
+    assert p.shuffle_algorithm == "reduce_scatter"
+    assert set(p.shuffle_candidate_us) == {"reduce_scatter", "allreduce"}
+    p13 = plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=13,
+                    **kw)
+    assert p13.shuffle_algorithm == "allreduce"
+    assert set(p13.shuffle_candidate_us) == {"allreduce"}
+    # generic (gather-allreduce) monoid: reduce_scatter is strictly cheaper
+    lifted = jax.ShapeDtypeStruct((128, 4), jnp.float32)
+    topk = plan_fold(monoids.top_k(4), lifted, segment_ids=segs,
+                     num_segments=16, layout="scan", **kw)
+    assert collective_algorithm(monoids.top_k(4)) == "gather"
+    assert topk.shuffle_algorithm == "reduce_scatter"
+    c = topk.shuffle_candidate_us
+    assert c["reduce_scatter"] < c["allreduce"]
+
+
+def test_shuffle_trivial_or_unknown_axis_is_allreduce():
+    vals = jax.ShapeDtypeStruct((32, 2), jnp.float32)
+    segs = jax.ShapeDtypeStruct((32,), jnp.int32)
+    p1 = plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=8,
+                   mesh_axes=("data",), axis_sizes={"data": 1})
+    assert p1.shuffle_algorithm == "allreduce"
+    assert p1.tiers[1].wire_bytes == 0
+    p_unknown = plan_fold(monoids.sum_, vals, segment_ids=segs,
+                          num_segments=8, mesh_axes=("data",))
+    assert p_unknown.shuffle_algorithm == "allreduce"
+    assert "size unknown" in p_unknown.tiers[1].detail
+
+
+def test_forced_infeasible_layout_errors_name_the_leaf(monkeypatch):
+    """A forced layout the inputs cannot take fails at PLAN time with the
+    offending leaf dtype in the message, not deep inside lowering."""
+    segs = jnp.zeros((8,), jnp.int32)
+    # kernel on a complex leaf: the error names the dtype and suggests a way out
+    with pytest.raises(ValueError, match="complex64"):
+        plan_fold(monoids.sum_, jnp.ones((8,), jnp.complex64),
+                  segment_ids=segs, num_segments=2, layout="kernel")
+    with pytest.raises(ValueError, match="layout='kernel'"):
+        plan_fold(monoids.sum_, jnp.ones((8,), jnp.complex64),
+                  segment_ids=segs, num_segments=2, layout="kernel")
+    # kernel on a monoid with no registered lowering
+    with pytest.raises(ValueError, match="no registered Pallas kernel"):
+        plan_fold(monoids.top_k(4), jnp.ones((8, 4), jnp.float32),
+                  segment_ids=segs, num_segments=2, layout="kernel")
+    # segment on a monoid with no XLA segment primitive
+    with pytest.raises(ValueError, match="no XLA segment primitive"):
+        plan_fold(monoids.top_k(4), jnp.ones((8, 4), jnp.float32),
+                  segment_ids=segs, num_segments=2, layout="segment")
+    # a pytree leaf path is named when the offender is nested
+    with pytest.raises(ValueError, match="count"):
+        plan_fold(monoids.product(s=monoids.sum_, count=monoids.sum_),
+                  {"s": jnp.ones((8,), jnp.float32),
+                   "count": jnp.ones((8,), jnp.complex64)},
+                  segment_ids=segs, num_segments=2, layout="kernel")
+
+
+def test_describe_prints_predicted_microseconds():
+    vals = jnp.ones((64, 4), jnp.float32)
+    segs = jnp.zeros((64,), jnp.int32)
+    p = plan_fold(monoids.sum_, vals, segment_ids=segs, num_segments=16,
+                  mesh_axes=("data", "pod"),
+                  axis_sizes={"data": 8, "pod": 2})
+    desc = p.describe()
+    assert "us]" in desc
+    assert p.predicted_us == pytest.approx(
+        sum(t.predicted_us for t in p.tiers))
+
+
+@pytest.mark.parametrize("name", ["sum", "max", "min", "count", "mean",
+                                  "bitwise_or"])
+@pytest.mark.parametrize("winner", KEYED_LAYOUTS)
+def test_auto_argmin_deterministic_zoo(name, winner, monkeypatch):
+    """Non-hypothesis coverage of the argmin contract across the whole keyed
+    zoo x every winner table x both backends (runs even without hypothesis
+    installed)."""
+    from repro.core import plan as plan_mod
+    from repro.core.plan import _LAYOUT_TIER_KIND
+
+    rng = np.random.default_rng(11)
+    m, values = _keyed_samples(name, 32, 3, rng)
+    segs = jnp.asarray(rng.integers(0, 4, 32).astype(np.int32))
+    calib = _winner_calibration(winner)
+    for backend in ("cpu", "tpu"):
+        monkeypatch.setattr(plan_mod.jax, "default_backend",
+                            lambda b=backend: b)
+        p = plan_fold(m, values, segment_ids=segs, num_segments=4,
+                      calibration=calib)
+        cand = p.candidate_us
+        best = min(cand, key=cand.get)
+        assert p.local_tier.kind == _LAYOUT_TIER_KIND[best], (
+            name, winner, backend, cand)
+        if backend == "cpu":
+            assert "kernel" not in cand
