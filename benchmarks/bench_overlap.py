@@ -1,0 +1,150 @@
+"""Overlap benches: the async double-buffered fold vs the sync crossing.
+
+Runs on an 8-fake-device (2 pod x 4 ici) mesh — the CI overlap pass sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before launching
+this module via ``benchmarks/run.py --overlap`` (with fewer devices the
+section prints a comment and emits nothing, so a bare local run never
+fails).
+
+Rows:
+
+* ``overlap_step_us/sync_dense``  — one ICI+DCN crossing of the summed
+  microbatches (``layout='scan'``), the baseline every other row is read
+  against.
+* ``overlap_step_us/sync_lossy``  — same shape with a ``lossy=`` top-k
+  annotation: compressed DCN crossing + error feedback.
+* ``overlap_step_us/async_dbuf``  — FORCED ``layout='async'``: one crossing
+  per microbatch, pipelined.  Informational: on CPU fake devices the host
+  collectives cannot actually overlap compute, so this row documents the
+  un-hidden cost of n crossings rather than a win.
+* ``overlap_step_us/auto``        — the planner's argmin between the two
+  shapes.  Gated by ``run.py --compare``: auto must stay within 1.10x of
+  sync_dense (the cost model may not buy overlap that is not there).
+* ``overlap_frac/{modeled,measured}_pct`` — the plan's promised hidden
+  fraction of DCN time next to the observed one (percent; measured is
+  1 - async/sequential over the same n-crossing schedule).
+* ``overlap_bytes/{dense,lossy}`` — per-step DCN bytes of the dense vs the
+  compressed crossing, read off the plan.  Gated: lossy < dense.
+
+Every figure flows through :func:`repro.core.mapreduce.fold_stats` — the
+same per-step record the straggler monitor consumes, so the bench and the
+health signal can never drift apart.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import execute_fold, monoids, plan_fold
+from repro.core.mapreduce import fold_stats
+from .common import row, time_fn
+
+_MESH_SHAPE = (2, 4)              # (pod, x): 2-way DCN, 4-way ICI
+_AXES = ("pod", "x")
+_FOLD_AXES = ("x", "pod")         # ICI first, then the slow axis
+_LOSSY = "topk:0.05"
+_GUARD = dict(warmup=3, iters=9)  # gated rows: extra iters for the median
+
+
+def _mesh():
+    return jax.make_mesh(_MESH_SHAPE, _AXES,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _sharded_step(mesh, fn):
+    """jit(shard_map(...)): each device folds its own (n_mb, d) block.
+
+    check_vma=False: the async tier's scan carry replication defeats the
+    static checker (see execute_fold's docstring)."""
+    spec = jax.sharding.PartitionSpec(_AXES)
+    return jax.jit(jax.shard_map(
+        lambda v: fn(v[0]), mesh=mesh, in_specs=(spec,),
+        out_specs=jax.sharding.PartitionSpec(), check_vma=False))
+
+
+def bench_overlap(n_mb: int = 4, d: int = 1 << 16):
+    if len(jax.devices()) < 8:
+        print("# overlap section skipped: needs 8 devices "
+              "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+        return
+    mesh = _mesh()
+    m = monoids.sum_
+    rng = np.random.default_rng(17)
+    data = jnp.asarray(
+        rng.normal(size=(8, n_mb, d)).astype(np.float32))
+    shape = jax.ShapeDtypeStruct((n_mb, d), jnp.float32)
+    sizes = dict(zip(_AXES, _MESH_SHAPE))
+
+    # plans (no FLOPs): the modeled side of every derived column below
+    plan_sync = plan_fold(m, shape, mesh_axes=_FOLD_AXES, layout="scan",
+                          axis_sizes=sizes)
+    plan_async = plan_fold(m, shape, mesh_axes=_FOLD_AXES, layout="async",
+                           axis_sizes=sizes)
+    plan_lossy = plan_fold(m, shape, mesh_axes=_FOLD_AXES, layout="scan",
+                           axis_sizes=sizes, lossy=_LOSSY)
+    plan_auto = plan_fold(m, shape, mesh_axes=_FOLD_AXES, layout="auto",
+                          axis_sizes=sizes)
+
+    sync_dense = _sharded_step(mesh, lambda v: execute_fold(
+        m, v, mesh_axes=_FOLD_AXES, layout="scan", mesh=mesh))
+    sync_lossy = _sharded_step(mesh, lambda v: execute_fold(
+        m, v, mesh_axes=_FOLD_AXES, layout="scan", mesh=mesh, lossy=_LOSSY))
+    async_dbuf = _sharded_step(mesh, lambda v: execute_fold(
+        m, v, mesh_axes=_FOLD_AXES, layout="async", mesh=mesh))
+    auto = _sharded_step(mesh, lambda v: execute_fold(
+        m, v, mesh_axes=_FOLD_AXES, layout="auto", mesh=mesh))
+
+    def _sequential(v):
+        # the async schedule with the pipelining taken out: one sync fold
+        # (local + full crossing) per microbatch, chained — the baseline
+        # the measured overlap fraction is read against
+        acc = jnp.zeros((d,), jnp.float32)
+        for i in range(n_mb):
+            acc = acc + execute_fold(m, v[i:i + 1], mesh_axes=_FOLD_AXES,
+                                     layout="scan", mesh=mesh)
+        return acc
+
+    sequential = _sharded_step(mesh, _sequential)
+
+    sync_us = time_fn(sync_dense, data, **_GUARD)
+    row("overlap_step_us/sync_dense", sync_us,
+        f"predicted_us={plan_sync.predicted_us:.1f};one crossing of the "
+        f"summed microbatches")
+    lossy_us = time_fn(sync_lossy, data, **_GUARD)
+    row("overlap_step_us/sync_lossy", lossy_us,
+        f"predicted_us={plan_lossy.predicted_us:.1f};lossy={plan_lossy.lossy}")
+    async_us = time_fn(async_dbuf, data, **_GUARD)
+    seq_us = time_fn(sequential, data)
+    measured_frac = max(0.0, 1.0 - async_us / max(seq_us, 1e-9))
+    row("overlap_step_us/async_dbuf", async_us,
+        f"predicted_us={plan_async.predicted_us:.1f};modeled_overlap="
+        f"{plan_async.overlap_modeled:.0%};sequential_us={seq_us:.1f}")
+    auto_us = time_fn(auto, data, **_GUARD)
+    chose = ("async" if plan_auto.local_tier.kind == "async" else "sync")
+    row("overlap_step_us/auto", auto_us,
+        f"chose={chose};candidates=" + ";".join(
+            f"{k}={us:.1f}" for k, us in plan_auto.plan_candidate_us))
+
+    # modeled vs measured overlap + dense vs wire bytes, all through the
+    # ShuffleStats record (fault_tolerance's StragglerMonitor reads the
+    # exact same fields)
+    stats = fold_stats(plan_async).with_measured(async_us,
+                                                 overlap=measured_frac)
+    row("overlap_frac/modeled_pct", stats.overlap_modeled * 100.0,
+        "plan's hidden fraction of DCN time (percent)")
+    row("overlap_frac/measured_pct", (stats.overlap_measured or 0.0) * 100.0,
+        f"1 - async/sequential; collapse={stats.overlap_collapse():.3f} "
+        "(CPU fake devices cannot overlap host collectives; ~0 expected)")
+    lstats = fold_stats(plan_lossy)
+    row("overlap_bytes/dense", float(lstats.dense_wire_bytes),
+        "per-device DCN bytes, dense crossing")
+    row("overlap_bytes/lossy", float(lstats.lossy_wire_bytes),
+        f"per-device DCN bytes, {lstats.lossy}; compression="
+        f"{lstats.compression_ratio():.1f}x")
+
+
+def main():
+    bench_overlap()
+
+
+if __name__ == "__main__":
+    main()

@@ -98,8 +98,71 @@ def _measure_collectives(warmup, iters):
     # per-device ring bytes for an allreduce of an nbytes payload
     wire = lambda b: 2.0 * b * (P_ - 1) / P_
     coeff = fit_link_coeff(bytes1=int(wire(b1)), t1_us=timed_psum(b1),
-                           bytes2=int(wire(b2)), t2_us=timed_psum(b2))
+                           bytes2=int(wire(b2)), t2_us=timed_psum(b2),
+                           overlap_frac=_measure_overlap(mesh, warmup, iters))
     return {"ici": coeff}
+
+
+def _measure_overlap(mesh, warmup, iters):
+    """Measured overlap coefficient of the visible link: how much of a
+    psum's in-flight time a double-buffered microbatch schedule actually
+    hides under independent compute (calibration.fit_overlap_frac).
+
+    Drives the planner's async-tier argmin: a runtime whose collectives
+    serialize with compute (CPU fake devices) measures ~0 and `auto` will
+    keep re-bracketing the fold to cross once at the end.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.calibration import fit_overlap_frac
+    from .common import time_fn
+
+    n_mb, dim, depth = 6, 1 << 16, 8
+
+    def compute(mb, w):
+        h = mb
+        for _ in range(depth):
+            h = jnp.tanh(h * w + 0.1)
+        return h
+
+    def serial(v, w):
+        def body(acc, mb):
+            return acc + jax.lax.psum(compute(mb, w), "x"), None
+        acc, _ = jax.lax.scan(body, jnp.zeros((dim,), jnp.float32), v[0])
+        return acc
+
+    def dbuf(v, w):
+        v = v[0]
+        def body(carry, mb):
+            acc, pending = carry
+            crossed = jax.lax.psum(pending, "x")   # independent of compute(mb)
+            return (acc + crossed, compute(mb, w)), None
+        (acc, pending), _ = jax.lax.scan(
+            body, (jnp.zeros((dim,), jnp.float32), compute(v[0], w)), v[1:])
+        return acc + jax.lax.psum(pending, "x")
+
+    def compute_only(v, w):
+        def body(acc, mb):
+            return acc + compute(mb, w), None
+        acc, _ = jax.lax.scan(body, jnp.zeros((dim,), jnp.float32), v[0])
+        return acc
+
+    P_ = mesh.devices.size
+    x = jnp.ones((P_, n_mb, dim), jnp.float32)
+    w = jnp.float32(0.5)
+    ts = {}
+    for name, fn in (("serial", serial), ("dbuf", dbuf),
+                     ("compute", compute_only)):
+        jitted = jax.jit(jax.shard_map(
+            fn, mesh=mesh, in_specs=(P("x"), None), out_specs=P(),
+            check_vma=False))
+        ts[name] = time_fn(jitted, x, w, warmup=warmup, iters=iters)
+    frac = fit_overlap_frac(t_serial_us=ts["serial"], t_dbuf_us=ts["dbuf"],
+                            t_compute_us=ts["compute"])
+    print(f"calib overlap: serial={ts['serial']:.0f}us dbuf={ts['dbuf']:.0f}us "
+          f"compute={ts['compute']:.0f}us -> overlap_frac={frac:.2f}")
+    return frac
 
 
 def calibrate(quick=False, out=None):

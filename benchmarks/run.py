@@ -20,16 +20,23 @@ import json
 import platform
 import sys
 
-from . import (bench_aggregation, bench_kernels, bench_mapreduce, bench_plan,
-               bench_serve, bench_sketches, bench_train)
+from . import (bench_aggregation, bench_kernels, bench_mapreduce,
+               bench_overlap, bench_plan, bench_serve, bench_sketches,
+               bench_train)
 from . import common
 
 # rows guarded by --compare: the planner-lowered hot paths + the serve tier
-GUARDED_PREFIXES = ("segment_fold", "mean_by_key", "plan_auto", "serve_")
+# + the overlap section's step rows
+GUARDED_PREFIXES = ("segment_fold", "mean_by_key", "plan_auto", "serve_",
+                    "overlap_step")
 REGRESSION_TOLERANCE = 1.20   # fail on >20% slower than the previous artifact
 # intra-run gate: layout='auto' must stay within this factor of the BEST
 # forced layout for the same case — the cost model may not mis-place a fold
 AUTO_TOLERANCE = 1.50
+# intra-run gate for the overlap section: the sync-vs-async argmin must not
+# cost more than timing noise over always-sync (on hardware where the DCN
+# crossing cannot actually hide, auto has to keep choosing sync)
+OVERLAP_TOLERANCE = 1.10
 
 
 def compare_rows(new_rows, old_rows, *, tolerance: float = REGRESSION_TOLERANCE):
@@ -76,12 +83,48 @@ def check_auto_rows(rows, *, tolerance: float = AUTO_TOLERANCE):
     return violations
 
 
+def check_overlap_rows(rows, *, tolerance: float = OVERLAP_TOLERANCE):
+    """Gate the overlap section against itself (no baseline needed).
+
+    * ``overlap_step_us/auto`` must stay within ``tolerance x`` the measured
+      ``overlap_step_us/sync_dense`` — the planner's sync-vs-async argmin
+      may not buy overlap the hardware does not deliver.
+    * ``overlap_bytes/lossy`` must be strictly below ``overlap_bytes/dense``
+      — a lossy annotation that does not shrink the DCN crossing is a bug.
+
+    Returns a list of human-readable violation strings; empty when the
+    section did not run (no 8-device mesh) or everything held.
+    """
+    vals = {str(r.get("name", "")): float(r.get("us_per_call", 0.0))
+            for r in rows}
+    violations = []
+    auto = vals.get("overlap_step_us/auto")
+    sync = vals.get("overlap_step_us/sync_dense")
+    if auto is not None and sync is not None and sync > 0 \
+            and auto > sync * tolerance:
+        violations.append(
+            f"overlap_step_us/auto {auto:.1f}us > {tolerance:.2f}x "
+            f"sync_dense {sync:.1f}us ({auto / sync:.2f}x): the planner "
+            "bought overlap that is not there")
+    dense = vals.get("overlap_bytes/dense")
+    lossy = vals.get("overlap_bytes/lossy")
+    if dense is not None and lossy is not None and lossy >= dense:
+        violations.append(
+            f"overlap_bytes/lossy {lossy:.0f}B >= dense {dense:.0f}B: "
+            "the lossy annotation moved no fewer bytes than the dense "
+            "crossing")
+    return violations
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only (CI bench-smoke)")
     ap.add_argument("--serve", action="store_true",
                     help="batched serving section only (CI serve-smoke)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="async-overlap section only (CI runs it under "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to a BENCH_*.json artifact")
     ap.add_argument("--compare", default=None, metavar="OLD_JSON",
@@ -97,6 +140,9 @@ def main(argv=None) -> int:
     if args.serve:
         print("# -- batched serving path (planner-lowered keyed folds, CPU) -----")
         bench_serve.main()
+    elif args.overlap:
+        print("# -- async overlap: double-buffered DCN crossing vs sync ---------")
+        bench_overlap.main()
     else:
         print("# -- Algorithms 1/3/4: mean-by-key & word count ------------------")
         bench_mapreduce.main()
@@ -131,6 +177,12 @@ def main(argv=None) -> int:
         # intra-run auto-vs-forced gate (no baseline needed): the planner's
         # layout='auto' rows must be within AUTO_TOLERANCE of the best
         # forced layout measured in THIS run
+        overlap_violations = check_overlap_rows(common.ROWS)
+        if overlap_violations:
+            print("# OVERLAP GATE FAILED:")
+            for v in overlap_violations:
+                print(f"#   {v}")
+            return 1
         auto_violations = check_auto_rows(common.ROWS)
         if auto_violations:
             print(f"# PLANNER AUTO REGRESSION (> {AUTO_TOLERANCE:.2f}x best "

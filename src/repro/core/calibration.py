@@ -39,7 +39,7 @@ import os
 import threading
 from typing import Dict, Mapping, Optional, Tuple
 
-CALIB_VERSION = 1
+CALIB_VERSION = 2
 
 # tier kinds the model knows; 'segment' (the layout spelling) maps to
 # 'segment_ops' (the TierPlan.kind spelling) in plan.py
@@ -63,6 +63,12 @@ class TierCoeff:
     t0_us: float
     us_per_byte: float
     us_per_record: float = 0.0
+    # links only: fraction of this link's in-flight time that a
+    # double-buffered schedule can hide under independent compute.  0 means
+    # crossings fully serialize with compute (the CPU fake-device runtime);
+    # ~1 means the DMA engines run free (TPU DCN).  Measured by
+    # ``roofline.py --calibrate`` from a dbuf-vs-serial probe.
+    overlap_frac: float = 0.0
 
     def local_us(self, num_records: int, record_bytes: int) -> float:
         return (self.t0_us + num_records * self.us_per_record
@@ -74,13 +80,15 @@ class TierCoeff:
 
 def _coeff_to_json(c: TierCoeff) -> Dict[str, float]:
     return {"t0_us": c.t0_us, "us_per_byte": c.us_per_byte,
-            "us_per_record": c.us_per_record}
+            "us_per_record": c.us_per_record,
+            "overlap_frac": c.overlap_frac}
 
 
 def _coeff_from_json(d: Mapping[str, float]) -> TierCoeff:
     return TierCoeff(t0_us=float(d.get("t0_us", 0.0)),
                      us_per_byte=float(d.get("us_per_byte", 0.0)),
-                     us_per_record=float(d.get("us_per_record", 0.0)))
+                     us_per_record=float(d.get("us_per_record", 0.0)),
+                     overlap_frac=float(d.get("overlap_frac", 0.0)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,9 +177,12 @@ _DEFAULT_TIERS: Dict[str, Dict[str, TierCoeff]] = {
 }
 
 # ICI ~ tens of GB/s with ~10us launch; DCN ~ sub-GB/s with ~100us latency.
+# overlap_frac is the TPU-flavored prior: DCN traffic rides DMA engines and
+# mostly hides under compute; ICI hops are short enough that little is left
+# to hide.  A measured table replaces both (CPU fake devices measure ~0).
 _DEFAULT_COLLECTIVES: Dict[str, TierCoeff] = {
-    "ici": TierCoeff(t0_us=10.0, us_per_byte=1e-4),
-    "dcn": TierCoeff(t0_us=100.0, us_per_byte=2e-3),
+    "ici": TierCoeff(t0_us=10.0, us_per_byte=1e-4, overlap_frac=0.25),
+    "dcn": TierCoeff(t0_us=100.0, us_per_byte=2e-3, overlap_frac=0.75),
 }
 
 _DEFAULT = Calibration(version=CALIB_VERSION, backend="any", source="default",
@@ -294,6 +305,51 @@ def get_calibration() -> Calibration:
 
 
 # ---------------------------------------------------------------------------
+# the double-buffered pipeline model (the async execution tier)
+# ---------------------------------------------------------------------------
+
+def pipeline_exposed_us(*, num_crossings: int, slot_us: float,
+                        cross_us: float) -> Tuple[float, float]:
+    """Exposed microseconds of ``num_crossings`` link crossings in a
+    double-buffered microbatch pipeline, BEFORE applying the link's
+    measured ``overlap_frac``.
+
+    Crossing *i* is in flight while microbatch slot *i+1* computes, so each
+    of the first ``n - 1`` crossings can hide up to one compute slot; the
+    epilogue crossing has nothing left to hide under and is always exposed.
+    Returns ``(exposed_us, hideable_us)`` with
+    ``exposed + hideable == num_crossings * cross_us``.
+    """
+    n = max(int(num_crossings), 0)
+    total = n * max(cross_us, 0.0)
+    if n <= 1 or total <= 0.0:
+        return total, 0.0
+    hideable = (n - 1) * min(max(slot_us, 0.0), cross_us)
+    return total - hideable, hideable
+
+
+def predict_overlap(calib: "Calibration", domain: str, *,
+                    num_crossings: int, slot_us: float,
+                    wire_bytes: float) -> Tuple[float, float]:
+    """Predicted ``(exposed_us, overlap_fraction)`` for ``num_crossings``
+    double-buffered crossings of ``wire_bytes`` each over ``domain``.
+
+    The link's calibrated ``overlap_frac`` scales the structurally hideable
+    time: a runtime whose collectives serialize with compute (overlap_frac
+    0) exposes the full ``n * cross_us`` no matter the schedule.
+    """
+    coeff = calib.link_coeff(domain)
+    cross_us = coeff.link_us(wire_bytes)
+    exposed, hideable = pipeline_exposed_us(
+        num_crossings=num_crossings, slot_us=slot_us, cross_us=cross_us)
+    hidden = hideable * min(max(coeff.overlap_frac, 0.0), 1.0)
+    total = num_crossings * cross_us
+    if total <= 0.0:
+        return 0.0, 0.0
+    return total - hidden, hidden / total
+
+
+# ---------------------------------------------------------------------------
 # coefficient fitting (used by benchmarks/roofline.py --calibrate)
 # ---------------------------------------------------------------------------
 
@@ -318,10 +374,30 @@ def fit_tier_coeff(*, n1: int, b1: int, t11_us: float,
 
 
 def fit_link_coeff(*, bytes1: int, t1_us: float,
-                   bytes2: int, t2_us: float) -> TierCoeff:
+                   bytes2: int, t2_us: float,
+                   overlap_frac: float = 0.0) -> TierCoeff:
     """Fit ``t(bytes) = t0 + bytes*us_per_byte`` from two payload sizes."""
     if bytes2 <= bytes1:
         raise ValueError(f"need bytes2 > bytes1; got ({bytes1}, {bytes2})")
     us_per_byte = max((t2_us - t1_us) / (bytes2 - bytes1), 0.0)
     t0 = max(t1_us - bytes1 * us_per_byte, 0.0)
-    return TierCoeff(t0_us=t0, us_per_byte=us_per_byte)
+    return TierCoeff(t0_us=t0, us_per_byte=us_per_byte,
+                     overlap_frac=overlap_frac)
+
+
+def fit_overlap_frac(*, t_serial_us: float, t_dbuf_us: float,
+                     t_compute_us: float) -> float:
+    """Measured overlap coefficient of a link from three timings of the
+    same microbatch fold: crossings serialized after each compute slot
+    (``t_serial``), crossings double-buffered against the next slot
+    (``t_dbuf``), and no crossings at all (``t_compute``).
+
+    The crossings cost ``t_serial - t_compute`` un-overlapped; the dbuf
+    schedule recovered ``t_serial - t_dbuf`` of it.  Clamped to [0, 1] —
+    scheduling overhead can make dbuf slower than serial (measured on CPU
+    fake devices), which is exactly an overlap coefficient of 0.
+    """
+    crossings_us = t_serial_us - t_compute_us
+    if crossings_us <= 0.0:
+        return 0.0
+    return min(max((t_serial_us - t_dbuf_us) / crossings_us, 0.0), 1.0)

@@ -58,6 +58,15 @@ class ShuffleStats:
       under the active calibration.
     measured_us: an observed wall time set by the caller via
       :meth:`with_measured`, so modeled-vs-measured rides one record.
+    overlap_modeled: the plan's modeled hidden fraction of DCN crossing time
+      (0 for sync plans: nothing is pipelined, nothing can hide).
+    overlap_measured: the observed hidden fraction, set via
+      :meth:`with_measured` — a healthy step keeps it near the model; a
+      straggling host shows up here as collapsing overlap before it shows
+      up as a timeout (see runtime/fault_tolerance.py).
+    dense_wire_bytes / lossy_wire_bytes: per-device DCN bytes of the dense
+      sync crossing vs what the plan actually moves (equal unless ``lossy``).
+    lossy: the compression annotation (``LossySpec.describe()``; '' = dense).
     """
 
     strategy: str
@@ -72,21 +81,66 @@ class ShuffleStats:
     shuffle_algorithm: str = ""
     predicted_us: float = 0.0
     measured_us: Optional[float] = None
+    overlap_modeled: float = 0.0
+    overlap_measured: Optional[float] = None
+    dense_wire_bytes: int = 0
+    lossy_wire_bytes: int = 0
+    lossy: str = ""
 
     def reduction_vs_naive(self) -> float:
         naive = self.num_records * self.value_bytes
         return naive / max(self.shuffle_bytes_mapreduce, 1)
 
-    def with_measured(self, us: float) -> "ShuffleStats":
-        """Attach an observed wall time (microseconds) to compare against
-        ``predicted_us`` — benchmarks report the model error from this."""
-        return dataclasses.replace(self, measured_us=float(us))
+    def with_measured(self, us: float, *,
+                      overlap: Optional[float] = None) -> "ShuffleStats":
+        """Attach an observed wall time (microseconds) — and optionally the
+        observed hidden-overlap fraction — to compare against the model;
+        benchmarks report the model error from this."""
+        return dataclasses.replace(
+            self, measured_us=float(us),
+            overlap_measured=(self.overlap_measured if overlap is None
+                              else float(overlap)))
 
     def model_error(self) -> Optional[float]:
         """measured/predicted ratio (None until both sides exist)."""
         if self.measured_us is None or self.predicted_us <= 0:
             return None
         return self.measured_us / self.predicted_us
+
+    def compression_ratio(self) -> float:
+        """dense/actual DCN bytes (1.0 when the crossing is dense)."""
+        if self.lossy_wire_bytes <= 0:
+            return 1.0
+        return self.dense_wire_bytes / self.lossy_wire_bytes
+
+    def overlap_collapse(self) -> Optional[float]:
+        """modeled − measured overlap fraction: how much of the promised
+        hiding did NOT happen (None until a measurement is attached; only
+        meaningful for async plans, where overlap_modeled > 0)."""
+        if self.overlap_measured is None:
+            return None
+        return self.overlap_modeled - self.overlap_measured
+
+
+def fold_stats(plan: Plan, *, strategy: str = "fold") -> ShuffleStats:
+    """:class:`ShuffleStats` for a planner-lowered FLAT fold (a gradient
+    fold, a metrics fold) — every figure read off the :class:`Plan`,
+    including the overlap and compression annotations.  This is the
+    per-step record the serving/training loops hand to
+    ``runtime.fault_tolerance`` and the benchmarks emit."""
+    crossings = (plan.num_records if plan.local_tier.kind == "async" else 1)
+    return ShuffleStats(
+        strategy=strategy, num_records=plan.num_records,
+        num_keys=plan.num_segments or 0, value_bytes=plan.value_bytes,
+        intermediate_values=plan.num_records, shuffle_values=crossings,
+        shuffle_bytes_mapreduce=crossings * plan.value_bytes,
+        shuffle_bytes_xla=plan.collective_wire_bytes,
+        plan=plan.describe(), shuffle_algorithm=plan.shuffle_algorithm or "",
+        predicted_us=plan.predicted_us,
+        overlap_modeled=plan.overlap_modeled,
+        dense_wire_bytes=plan.dense_wire_bytes,
+        lossy_wire_bytes=plan.lossy_wire_bytes,
+        lossy=plan.lossy or "")
 
 
 def validate_combiner(monoid: Monoid, example_value: Pytree,

@@ -497,3 +497,95 @@ REGISTRY: Dict[str, Monoid] = {
     "affine_scan": affine_scan,
     "bitwise_or": bitwise_or,
 }
+
+# ---------------------------------------------------------------------------
+# law-sample registry — what makes the CI monoid-law step discovery-driven
+# ---------------------------------------------------------------------------
+# Every monoid in REGISTRY must come with a sample provider: a zero-arg
+# callable returning a few representative *monoid values* (post-lift) that
+# `monoid.check_laws` can combine.  tests/test_monoid_laws.py enumerates
+# the registry and fails CI with a pointed message for any monoid that was
+# registered without one, so a new monoid cannot ship law-unchecked.
+
+_LAW_SAMPLES: Dict[str, object] = {}   # name -> Callable[[], List[Pytree]]
+
+
+def register_monoid(m: Monoid, law_samples, *, replace: bool = False) -> Monoid:
+    """Register ``m`` in :data:`REGISTRY` together with its law samples.
+
+    ``law_samples`` is a zero-arg callable returning >= 3 monoid values
+    (so associativity has three distinct operands).  Registering a name
+    twice without ``replace=True`` is an error — silently shadowing a
+    monoid is how laws stop being checked.
+    """
+    if m.name in REGISTRY and not replace:
+        raise ValueError(f"monoid {m.name!r} is already registered")
+    REGISTRY[m.name] = m
+    _LAW_SAMPLES[m.name] = law_samples
+    return m
+
+
+def law_samples_for(name: str):
+    """The registered sample provider for ``name`` (None when missing)."""
+    return _LAW_SAMPLES.get(name)
+
+
+def missing_law_samples() -> list:
+    """Registered monoid names with no law samples — must stay empty."""
+    return sorted(name for name in REGISTRY if name not in _LAW_SAMPLES)
+
+
+def law_suite():
+    """Yield ``(monoid, samples)`` for every registered monoid that has a
+    sample provider; the discovery test asserts none are missing first."""
+    for name in sorted(REGISTRY):
+        fn = _LAW_SAMPLES.get(name)
+        if fn is not None:
+            yield REGISTRY[name], fn()
+
+
+def _f32(seed, shape=(3,)):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def _zoo_law_samples() -> Dict[str, object]:
+    """Sample providers for the built-in zoo (values are post-lift states)."""
+    return {
+        "sum": lambda: [_f32(s) for s in (0, 1, 2)],
+        "prod": lambda: [_f32(s) * 0.5 + 1.0 for s in (0, 1, 2)],
+        "max": lambda: [_f32(s) for s in (3, 4, 5)],
+        "min": lambda: [_f32(s) for s in (6, 7, 8)],
+        "bitwise_or": lambda: [
+            jnp.asarray(np.random.default_rng(s).integers(0, 255, 4),
+                        np.uint8) for s in (0, 1, 2)],
+        "mean": lambda: [(_f32(s), jnp.asarray(s + 1, jnp.int32))
+                         for s in (0, 1, 2)],
+        "count": lambda: [jnp.asarray(c, jnp.int32) for c in (1, 4, 9)],
+        "welford": lambda: [
+            (jnp.asarray(float(n)), _f32(n, ()), jnp.abs(_f32(n + 10, ())))
+            for n in (1, 2, 3)],
+        "logsumexp": lambda: [(_f32(s, ()), jnp.abs(_f32(s + 20, ())) + 0.1)
+                              for s in (0, 1, 2)],
+        "attn_state": lambda: [
+            (_f32(s, ()), jnp.abs(_f32(s + 30, ())) + 0.1, _f32(s + 40, (4,)))
+            for s in (0, 1, 2)],
+        "affine_scan": lambda: [(_f32(s) * 0.5 + 1.0, _f32(s + 50))
+                                for s in (0, 1, 2)],
+    }
+
+
+_LAW_SAMPLES.update(_zoo_law_samples())
+
+# representative instances of the parametrized factories, so the discovery
+# suite exercises their combine/identity too (the factories themselves are
+# covered via these: the laws do not depend on the size parameters)
+register_monoid(top_k(4), lambda: [
+    top_k(4).lift((jnp.asarray(v, jnp.float32), jnp.asarray(i, jnp.int32)))
+    for v, i in ((3.0, 7), (1.5, 2), (9.0, 5))])
+register_monoid(bloom_filter(64, 2), lambda: [
+    bloom_filter(64, 2).lift(jnp.asarray(x, jnp.int32)) for x in (3, 11, 42)])
+register_monoid(count_min(2, 32), lambda: [
+    count_min(2, 32).lift(jnp.asarray(x, jnp.int32)) for x in (3, 11, 42)])
+register_monoid(hyperloglog(4), lambda: [
+    hyperloglog(4).lift(jnp.asarray(x, jnp.int32)) for x in (3, 11, 42)])

@@ -39,11 +39,13 @@ import jax.numpy as jnp
 from .monoid import (KernelLowering, Monoid, Pytree, register_kernel_lowering,
                      scan_fold, tree_fold)
 from .aggregation import _PMAX_LIKE, _PMIN_LIKE, _PSUM_LIKE, tree_bytes
-from .calibration import Calibration, get_calibration
+from .calibration import Calibration, get_calibration, pipeline_exposed_us
 
-LAYOUTS = ("auto", "kernel", "segment", "scan", "tree")
+LAYOUTS = ("auto", "kernel", "segment", "scan", "tree", "async")
 
-# layout spelling (user-facing) -> calibration tier kind (TierPlan.kind)
+# layout spelling (user-facing) -> calibration tier kind (TierPlan.kind).
+# 'async' is absent on purpose: it is a whole-plan shape (fused local +
+# pipelined crossings), not a local tier the per-record model prices.
 _LAYOUT_TIER_KIND = {"kernel": "kernel", "segment": "segment_ops",
                      "scan": "scan", "tree": "tree"}
 
@@ -186,6 +188,16 @@ class Plan:
     value_bytes: int          # bytes of ONE lifted monoid value
     out_bytes: int            # bytes of the final local result (table/value)
     num_valid: Optional[int] = None
+    # -- overlap / compression annotations (flat mesh folds) ----------------
+    lossy: Optional[str] = None        # LossySpec.describe() when annotated
+    overlap_modeled: float = 0.0       # modeled hidden fraction of DCN time
+    dense_wire_bytes: int = 0          # per-device DCN bytes of a dense sync
+                                       #   crossing (0: no DCN axis planned)
+    lossy_wire_bytes: int = 0          # per-device DCN bytes actually planned
+                                       #   (== dense_wire_bytes when not lossy)
+    plan_candidate_us: Tuple[Tuple[str, float], ...] = ()
+                                       # whole-plan (sync vs async) argmin
+                                       #   table when both shapes were priced
 
     @property
     def local_tier(self) -> TierPlan:
@@ -231,7 +243,13 @@ class Plan:
         for t in self.tiers:
             us = f" ~{t.predicted_us:.1f}us" if t.predicted_us > 0 else ""
             parts.append(f"{t.kind}[{t.detail}{us}]")
-        return " -> ".join(parts)
+        s = " -> ".join(parts)
+        if self.lossy:
+            s += (f" [lossy={self.lossy}: dcn {self.lossy_wire_bytes}B"
+                  f" vs {self.dense_wire_bytes}B dense]")
+        if self.overlap_modeled > 0.0:
+            s += f" [overlap modeled {self.overlap_modeled:.0%}]"
+        return s
 
 
 def collective_algorithm(m: Monoid) -> str:
@@ -436,6 +454,76 @@ def _plan_collective_tier(calib: Calibration, label: str, ax: Any,
                     predicted_us=costs[kind], candidate_us=cand_us)
 
 
+def _plan_lossy_dcn_tier(calib: Calibration, ax: Any, P: Optional[int],
+                         comp_bytes: int, dense_bytes: int,
+                         spec) -> TierPlan:
+    """The DCN crossing of a ``lossy=`` fold: compressed messages gathered
+    and combined on-device (concat + scatter-add / dequant-sum — the lossy
+    monoid's exact regime), priced at the COMPRESSED bytes."""
+    detail = f"dcn:{ax} lossy[{spec.describe()}] {comp_bytes}B/{dense_bytes}B"
+    if not P or P <= 1:
+        return TierPlan("allreduce", detail + ("" if P else " (size unknown)"),
+                        comp_bytes, 0)
+    per_dev = float(comp_bytes) * (P - 1)    # gather: each message replicated
+    return TierPlan("allreduce", detail, comp_bytes,
+                    int(comp_bytes * (P - 1) * P),
+                    predicted_us=calib.predict_link_us("dcn", per_dev))
+
+
+def _plan_async_tier(calib: Calibration, *, n: int, value_bytes: int,
+                     out_bytes: int, local_us_total: float,
+                     ici: Sequence[Any], dcn: Sequence[Any],
+                     sizes: Mapping[Any, int], spec, comp_bytes: int,
+                     algo: str) -> Tuple[TierPlan, float, float]:
+    """Price the double-buffered shape: n ICI-combined partials, the DCN
+    crossing of partial i pipelined against the compute of partial i+1.
+
+    Per-microbatch ICI combines and the compute slot cannot hide anything
+    (they ARE the foreground work); of the n DCN crossings, n-1 are
+    pipelined and the epilogue is structurally exposed.  How much of the
+    pipelined in-flight time is actually hidden is the platform's measured
+    ``overlap_frac`` (0 where the compiler serializes collectives against
+    compute — CPU — so 'auto' correctly declines the shape there).
+
+    Returns (tier, total_us, modeled hidden fraction of DCN time).
+    """
+    ici_us, ici_wire = 0.0, 0
+    for ax in ici:
+        P = sizes.get(ax)
+        if P and P > 1:
+            ici_us += calib.predict_link_us(
+                "ici", _per_device_shuffle_bytes(value_bytes, P,
+                                                 "allreduce", algo))
+            ici_wire += collective_wire_bytes(value_bytes, P, algo)
+    cross_us, dcn_wire = 0.0, 0
+    for ax in dcn:
+        P = sizes.get(ax)
+        if P and P > 1:
+            if spec is not None:
+                cross_us += calib.predict_link_us(
+                    "dcn", float(comp_bytes) * (P - 1))
+                dcn_wire += comp_bytes * (P - 1) * P
+            else:
+                cross_us += calib.predict_link_us(
+                    "dcn", _per_device_shuffle_bytes(value_bytes, P,
+                                                     "allreduce", algo))
+                dcn_wire += collective_wire_bytes(value_bytes, P, algo)
+    slot_us = local_us_total / n + ici_us
+    exposed, hideable = pipeline_exposed_us(
+        num_crossings=n, slot_us=slot_us, cross_us=cross_us)
+    ofrac = min(max(calib.link_coeff("dcn").overlap_frac, 0.0), 1.0)
+    hidden = hideable * ofrac
+    total_cross = n * cross_us
+    total = local_us_total + n * ici_us + total_cross - hidden
+    modeled = hidden / total_cross if total_cross > 0.0 else 0.0
+    detail = (f"double-buffered x{n} microbatch crossings"
+              + (f" lossy[{spec.describe()}]" if spec is not None else "")
+              + f", modeled overlap {modeled:.0%}")
+    tier = TierPlan("async", detail, out_bytes,
+                    n * (ici_wire + dcn_wire), predicted_us=total)
+    return tier, total, modeled
+
+
 def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
               num_segments: Optional[int] = None,
               valid_mask=None,
@@ -445,6 +533,7 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
               mesh: Optional[jax.sharding.Mesh] = None,
               axis_sizes: Optional[Mapping[Any, int]] = None,
               pre_combine: bool = True, block_n: int = 512,
+              lossy=None,
               calibration: Optional[Calibration] = None) -> Plan:
     """Lower a fold to a tiered :class:`Plan` without executing it.
 
@@ -468,6 +557,20 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
     (``Plan.num_valid``).  This is how padded batches and packed sequences
     fold without materializing a rectangle of real records.
 
+    ``layout='async'`` plans the double-buffered shape of
+    :func:`repro.dist.collectives.async_microbatch_fold` — the DCN crossing
+    of record *i*'s ICI-combined partial pipelined against record *i+1*'s
+    compute.  It is a flat-fold layout and needs ``mesh_axes=``; under
+    ``layout='auto'`` the shape participates in the argmin (priced with the
+    calibrated ``overlap_frac`` of the DCN link), with a predicted tie going
+    to the sync shape.
+
+    ``lossy=`` (a :class:`repro.optim.compress.LossySpec` or its string
+    spelling, e.g. ``"topk:0.01"``) annotates a flat additive fold: the DCN
+    crossing moves the compressed representation instead of dense floats,
+    and the byte/time model prices the compressed bytes
+    (``Plan.lossy_wire_bytes`` vs ``Plan.dense_wire_bytes``).
+
     Axis sizes for collective byte prediction come from ``mesh`` or
     ``axis_sizes``; unknown sizes predict 0 wire bytes.
     """
@@ -479,6 +582,27 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
             "segment_ids= was passed without num_segments=: a keyed fold "
             "returns a static (num_segments, ...) table, so pass the key-"
             "space size as num_segments=")
+    spec = None
+    if lossy is not None:
+        from ..optim.compress import LossySpec  # lazy: optim imports core
+        spec = LossySpec.parse(lossy)
+        if keyed:
+            raise ValueError(
+                "lossy= compression applies to flat (gradient) folds; keyed "
+                "tables cross the wire dense")
+        if m.name != "sum":
+            raise ValueError(
+                f"lossy= compression needs an additive fold; got monoid "
+                f"{m.name!r}")
+    if layout == "async":
+        if keyed:
+            raise ValueError(
+                "layout='async' overlaps the DCN crossing of a flat "
+                "microbatch fold; keyed folds use kernel/segment/scan")
+        if not mesh_axes:
+            raise ValueError(
+                "layout='async' needs mesh_axes= — without a mesh there is "
+                "no crossing to overlap")
 
     n = _leading_dim(values)
     if valid_mask is not None:
@@ -561,12 +685,17 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
         # with map_fn the point is O(1) live values — materializing for the
         # tree tier would defeat it, so auto considers the fused scan only
         candidates = ["scan"] if map_fn is not None else ["tree", "scan"]
-        shown = candidates + ([layout] if layout not in ("auto", *candidates)
+        # 'async' fuses an in-mapper scan with pipelined crossings: its
+        # local work is the scan tier's, chosen here; the whole-plan shape
+        # is decided after the sync collectives are priced below
+        eff_layout = "auto" if layout == "async" else layout
+        shown = candidates + ([eff_layout]
+                              if eff_layout not in ("auto", *candidates)
                               else [])
         candidate_us = tuple((c, local_us(c)) for c in shown)
         costs = dict(candidate_us)
-        kind = (min(candidates, key=costs.get) if layout == "auto"
-                else layout)
+        kind = (min(candidates, key=costs.get) if eff_layout == "auto"
+                else eff_layout)
         if kind == "tree":
             local = TierPlan("tree",
                              f"log-depth tree fold (Alg 3 combiner){masked}",
@@ -603,14 +732,62 @@ def plan_fold(m: Monoid, values: Pytree, *, segment_ids=None,
         tiers.append(local)
         if mesh_axes:
             ici, dcn = _split_ici_dcn(mesh_axes)
-            for group, label in ((ici, "ici"), (dcn, "dcn")):
-                for ax in group:
+            comp_bytes = spec.wire_bytes(value_shape) if spec else 0
+            for ax in ici:
+                tiers.append(_plan_collective_tier(
+                    calib, "ici", ax, sizes.get(ax), out_bytes,
+                    num_segments if keyed else None, algo))
+            for ax in dcn:
+                if spec is not None and not keyed:
+                    tiers.append(_plan_lossy_dcn_tier(
+                        calib, ax, sizes.get(ax), comp_bytes, out_bytes,
+                        spec))
+                else:
                     tiers.append(_plan_collective_tier(
-                        calib, label, ax, sizes.get(ax), out_bytes,
+                        calib, "dcn", ax, sizes.get(ax), out_bytes,
                         num_segments if keyed else None, algo))
+
+    # -- overlap / compression annotations + the sync-vs-async argmin --------
+    overlap_modeled = 0.0
+    dense_wire = lossy_wire = 0
+    plan_cand: Tuple[Tuple[str, float], ...] = ()
+    if not keyed and mesh_axes and pre_combine:
+        ici, dcn = _split_ici_dcn(mesh_axes)
+        comp_bytes = spec.wire_bytes(value_shape) if spec else 0
+        for ax in dcn:
+            P = sizes.get(ax)
+            if P and P > 1:
+                dense_wire += int(_per_device_shuffle_bytes(
+                    out_bytes, P, "allreduce", algo))
+                lossy_wire += (comp_bytes * (P - 1) if spec is not None
+                               else int(_per_device_shuffle_bytes(
+                                   out_bytes, P, "allreduce", algo)))
+        if n > 1 and layout in ("auto", "async"):
+            async_tier, async_total, modeled = _plan_async_tier(
+                calib, n=n, value_bytes=vbytes, out_bytes=out_bytes,
+                local_us_total=local.predicted_us, ici=ici, dcn=dcn,
+                sizes=sizes, spec=spec, comp_bytes=comp_bytes, algo=algo)
+            sync_total = float(sum(t.predicted_us for t in tiers))
+            plan_cand = (("sync", sync_total), ("async", async_total))
+            # a predicted tie goes to sync: one crossing beats n crossings
+            # whenever the model cannot prove the extra n-1 are hidden
+            if layout == "async" or async_total < sync_total:
+                async_tier = dataclasses.replace(async_tier,
+                                                 candidate_us=plan_cand)
+                tiers = [async_tier]
+                overlap_modeled = modeled
+                lossy_wire = (comp_bytes * sum(
+                    sizes[ax] - 1 for ax in dcn
+                    if sizes.get(ax) and sizes[ax] > 1) * n
+                    if spec is not None else dense_wire * n)
+                dense_wire *= n
     return Plan(monoid=m, tiers=tuple(tiers), num_records=n,
                 num_segments=num_segments, value_bytes=vbytes,
-                out_bytes=out_bytes, num_valid=num_valid)
+                out_bytes=out_bytes, num_valid=num_valid,
+                lossy=spec.describe() if spec else None,
+                overlap_modeled=overlap_modeled,
+                dense_wire_bytes=dense_wire, lossy_wire_bytes=lossy_wire,
+                plan_candidate_us=plan_cand)
 
 
 # ---------------------------------------------------------------------------
@@ -726,6 +903,7 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
                  block_n: int = 512, interpret: Optional[bool] = None,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  axis_sizes: Optional[Mapping[Any, int]] = None,
+                 lossy=None, ef: Optional[Pytree] = None,
                  calibration: Optional[Calibration] = None,
                  with_plan: bool = False) -> Pytree:
     """Fold monoid values through the planner-chosen tiers.
@@ -752,6 +930,15 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
     the in-mapper combining of Algorithm 4.  ``lifted=False`` applies
     ``m.lift`` to each element first.
 
+    ``lossy=`` (flat additive folds with ``mesh_axes=``) crosses the DCN
+    axis compressed, with error feedback: the return value becomes the pair
+    ``(folded, new_ef)`` where ``new_ef`` is the residual fold state to pass
+    back as ``ef=`` on the next step (``None`` starts from zeros).
+    ``layout='async'`` executes the double-buffered microbatch fold of
+    :func:`repro.dist.collectives.async_microbatch_fold`; the surrounding
+    ``shard_map`` needs ``check_rep=False`` (the scan carry's replication
+    defeats the static checker).
+
     Returns the folded value — or ``(value, plan)`` with ``with_plan=True``.
     """
     plan_mask = valid_mask
@@ -766,12 +953,36 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
                      num_segments=num_segments, valid_mask=plan_mask,
                      mesh_axes=mesh_axes,
                      layout=layout, lifted=lifted, map_fn=map_fn, mesh=mesh,
-                     axis_sizes=axis_sizes, block_n=block_n,
+                     axis_sizes=axis_sizes, block_n=block_n, lossy=lossy,
                      calibration=calibration)
     kind = plan.local_tier.kind
     keyed = segment_ids is not None
     if valid_mask is not None and axis != 0:
         raise ValueError("valid_mask requires the batch axis at 0")
+
+    spec = None
+    if lossy is not None:
+        from ..optim.compress import LossySpec
+        spec = LossySpec.parse(lossy)
+
+    if kind == "async":
+        if valid_mask is not None:
+            raise ValueError("layout='async' does not support valid_mask; "
+                             "mask rows to the identity before the fold")
+        if axis != 0:
+            raise ValueError("async folds require the batch axis at 0")
+        if init is not None:
+            raise ValueError("init is only supported for keyed folds")
+        from ..dist.collectives import async_microbatch_fold
+        if spec is not None and ef is None:
+            one = _lifted_value_shape(m, values, lifted, map_fn)
+            ef = jax.tree_util.tree_map(
+                lambda l: jnp.zeros(l.shape, jnp.float32), one)
+        out, new_ef = async_microbatch_fold(m, values, mesh_axes,
+                                            map_fn=map_fn, lifted=lifted,
+                                            lossy=spec, ef=ef)
+        result = (out, new_ef) if spec is not None else out
+        return (result, plan) if with_plan else result
 
     if keyed:
         if axis != 0:
@@ -814,17 +1025,31 @@ def execute_fold(m: Monoid, values: Pytree, *, segment_ids=None,
     if mesh_axes:
         from ..dist.collectives import (combine_keyed_table,
                                         cross_axes_allreduce,
+                                        lossy_cross_axes,
                                         split_axis_names)
-        coll = [t for t in plan.tiers
-                if t.kind in ("allreduce", "reduce_scatter")]
-        if keyed and any(t.kind == "reduce_scatter" for t in coll):
-            # execute the plan's per-axis shuffle choice: axis order here
-            # (ICI then DCN) matches the planner's tier order by construction
-            ici, dcn = split_axis_names(mesh_axes)
-            for ax, tier in zip(tuple(ici) + tuple(dcn), coll):
-                out = combine_keyed_table(m, out, ax, algorithm=tier.kind)
+        if spec is not None:
+            if ef is None:
+                ef = jax.tree_util.tree_map(
+                    lambda l: jnp.zeros(jnp.shape(l), jnp.float32), out)
+            out, ef = lossy_cross_axes(spec, out, mesh_axes, ef=ef)
         else:
-            out = cross_axes_allreduce(m, out, mesh_axes)
+            coll = [t for t in plan.tiers
+                    if t.kind in ("allreduce", "reduce_scatter")]
+            if keyed and any(t.kind == "reduce_scatter" for t in coll):
+                # execute the plan's per-axis shuffle choice: axis order here
+                # (ICI then DCN) matches the planner's tier order by
+                # construction
+                ici, dcn = split_axis_names(mesh_axes)
+                for ax, tier in zip(tuple(ici) + tuple(dcn), coll):
+                    out = combine_keyed_table(m, out, ax, algorithm=tier.kind)
+            else:
+                out = cross_axes_allreduce(m, out, mesh_axes)
+    if spec is not None:
+        if ef is None:   # lossy annotation but no mesh: residual stays zero
+            ef = jax.tree_util.tree_map(
+                lambda l: jnp.zeros(jnp.shape(l), jnp.float32), out)
+        result = (out, ef)
+        return (result, plan) if with_plan else result
     return (out, plan) if with_plan else out
 
 

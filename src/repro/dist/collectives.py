@@ -12,9 +12,10 @@ to classify axes, never to launch collectives.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from ..core.aggregation import (hierarchical_psum, monoid_allreduce,
@@ -120,3 +121,143 @@ def metrics_sync(metrics: Pytree, mesh: Mesh,
     """Sum-monoid metric aggregation (loss_sum, tokens, expert_load, ...):
     one combine per axis, ICI first, so DCN carries a single scalar tree."""
     return cross_mesh_allreduce(monoids.sum_, metrics, mesh, axes)
+
+
+# ---------------------------------------------------------------------------
+# lossy DCN crossings — compressed representations on the slow wire
+# ---------------------------------------------------------------------------
+
+def _lossy_dcn_combine(spec, comp: Pytree, like: Pytree,
+                       dcn: Sequence[Any]) -> Pytree:
+    """Combine compressed gradient messages across the DCN axes; return dense.
+
+    Each party contributes its compressed message (sparse {values, idx} or
+    {q, scale}); the receiver sums the *messages* exactly — concatenate +
+    scatter-add for sparse (the exact regime of
+    :func:`repro.optim.compress.topk_sparse_monoid`: total entries fit the
+    union capacity), dequantize-and-sum for int8 — so the only loss in the
+    crossing is the compression itself, which error feedback recovers.
+    What crosses the wire per party is ``spec.wire_bytes(like)``, not the
+    dense bytes.
+    """
+    if spec.method == "int8":
+        def leaf(c, g):
+            q, s = c["q"], c["scale"]
+            for ax in dcn:
+                q = jax.lax.all_gather(q, ax, axis=0)
+                s = jax.lax.all_gather(s, ax, axis=0)
+            q = q.reshape((-1,) + g.shape)
+            total = jnp.tensordot(s.reshape(-1), q.astype(jnp.float32),
+                                  axes=([0], [0]))
+            return total.astype(g.dtype)
+        is_leaf = lambda x: isinstance(x, dict) and "q" in x  # noqa: E731
+    else:
+        def leaf(c, g):
+            v, i = c["values"], c["idx"]
+            for ax in dcn:
+                v = jax.lax.all_gather(v, ax, axis=0)
+                i = jax.lax.all_gather(i, ax, axis=0)
+            flat = jnp.zeros((c["size"],), jnp.float32)
+            flat = flat.at[i.reshape(-1)].add(v.reshape(-1))
+            return flat.reshape(g.shape).astype(g.dtype)
+        is_leaf = lambda x: isinstance(x, dict) and "values" in x  # noqa: E731
+    return jax.tree_util.tree_map(leaf, comp, like, is_leaf=is_leaf)
+
+
+def lossy_cross_axes(spec, grads: Pytree, axes: Sequence[Any], *,
+                     ef: Pytree) -> Tuple[Pytree, Pytree]:
+    """Gradient combine with a compressed DCN crossing: dense over ICI,
+    ``spec``-compressed over DCN, error-feedback residual returned as the
+    new fold state.
+
+    With no DCN axis among ``axes`` compression buys nothing (ICI is the
+    fast wire) and is skipped — the dense result and untouched ``ef`` come
+    back, so callers can annotate unconditionally and only pay on meshes
+    where the slow axis exists.
+    """
+    ici, dcn = split_axis_names(axes)
+    if ici:
+        grads = monoid_allreduce(monoids.grad_sum, grads, ici)
+    if not dcn:
+        return grads, ef
+    comp, new_ef = spec.compress(grads, ef)
+    return _lossy_dcn_combine(spec, comp, grads, dcn), new_ef
+
+
+# ---------------------------------------------------------------------------
+# async (double-buffered) microbatch fold — overlap the shuffle with compute
+# ---------------------------------------------------------------------------
+
+def async_microbatch_fold(m: Monoid, xs: Pytree, axes: Sequence[Any], *,
+                          map_fn: Optional[Callable[[Pytree], Pytree]] = None,
+                          lifted: bool = True, lossy=None,
+                          ef: Optional[Pytree] = None,
+                          ) -> Tuple[Pytree, Optional[Pytree]]:
+    """Double-buffered microbatch fold: the DCN crossing of microbatch *i*'s
+    ICI-combined partial is issued in the same scan body as microbatch
+    *i+1*'s compute, so the compiler may overlap the slow crossing with
+    useful work.  This is the execution behind ``layout='async'`` in
+    :func:`repro.core.plan.execute_fold`.
+
+    Schedule (n microbatches, n >= 1):
+
+        compute(0)                                  # prologue
+        for i in 1..n-1:  cross(i-1)  ||  compute(i)  # scan body: overlap
+        cross(n-1); combine                          # exposed epilogue
+
+    Only the epilogue crossing is structurally un-hideable; how much of the
+    n-1 pipelined crossings is actually hidden is a platform property the
+    calibration measures (``TierCoeff.overlap_frac`` — ~0 on CPU, where XLA
+    serializes collectives against compute).
+
+    Args:
+      m: the fold monoid.  ``lossy`` requires an additive monoid (sum).
+      xs: pytree stacked along a leading microbatch axis.
+      axes: mesh axis names to combine across (classified ICI/DCN by name).
+      map_fn: per-microbatch compute, applied before ``m.lift``.
+      lossy: optional :class:`repro.optim.compress.LossySpec` — compress each
+        partial's DCN crossing, error feedback carried in the scan carry
+        (resumable fold state).
+      ef: error-feedback state (required shape = partial's) when ``lossy``.
+
+    Returns ``(total, new_ef)``; ``new_ef`` is ``ef`` passed through (or
+    updated per crossing when ``lossy``).
+    """
+    if lossy is not None and m.name != "sum":
+        raise ValueError(
+            f"lossy= compression needs an additive fold; got monoid {m.name!r}")
+    ici, dcn = split_axis_names(axes)
+
+    def local(x):
+        if map_fn is not None:
+            v = m.lift(map_fn(x))
+        elif not lifted:
+            v = m.lift(x)
+        else:
+            v = x
+        return monoid_hierarchical_allreduce(m, v, ici) if ici else v
+
+    def cross(v, ef_c):
+        if not dcn:
+            return v, ef_c
+        if lossy is None:
+            return monoid_hierarchical_allreduce(m, v, dcn), ef_c
+        comp, ef_c = lossy.compress(v, ef_c)
+        return _lossy_dcn_combine(lossy, comp, v, dcn), ef_c
+
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    first = local(jax.tree_util.tree_map(lambda x: x[0], xs))
+    if n == 1:
+        return cross(first, ef)
+
+    def body(carry, x):
+        acc, pending, ef_c = carry
+        crossed, ef_c = cross(pending, ef_c)   # crossing of microbatch i ...
+        cur = local(x)                         # ... issued with compute of i+1
+        return (m.combine(acc, crossed), cur, ef_c), None
+
+    rest = jax.tree_util.tree_map(lambda x: x[1:], xs)
+    (acc, pending, ef), _ = jax.lax.scan(
+        body, (m.identity_like(first), first, ef), rest)
+    crossed, ef = cross(pending, ef)           # exposed epilogue crossing
+    return m.combine(acc, crossed), ef

@@ -119,6 +119,7 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell, *,
                     opt: OptConfig = OptConfig(),
                     ctx: Optional[RunCtx] = None,
                     num_microbatches: int = 1,
+                    lossy: Optional[str] = None,
                     rules: Optional[Dict[str, Any]] = None,
                     donate: bool = True) -> BuiltStep:
     """Build the jit'd train step for (arch x train shape) on a mesh.
@@ -126,11 +127,26 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell, *,
     num_microbatches > 1 folds gradients over microbatches with a lax.scan
     carry — the paper's in-mapper combining (Algorithm 4) applied to the
     gradient Sum monoid; nothing per-microbatch is materialized.
+
+    ``lossy`` (e.g. ``"topk:0.01"`` / ``"blocktopk:0.001"`` / ``"int8"``)
+    annotates the gradient fold with the compressor a cross-pod (DCN) wire
+    would apply (optim/compress.py): the update consumes the compressed
+    round-trip of the folded gradients, and the error-feedback residual is
+    carried as ``opt_state["ef"]`` — resumable fold state that checkpoints
+    with the optimizer, so the applied-update sum converges to the true
+    gradient sum across steps.  Under this jit step the numerics are
+    identical to what the planner's lossy DCN crossing applies under
+    shard_map; the wire-byte savings themselves are the planner's story
+    (core/plan.py, benchmarks/bench_overlap.py).
     """
     rules = trim_rules(rules or shd.TRAIN_RULES, mesh)
     ctx = ctx or RunCtx(mesh=mesh)
     if ctx.mesh is None:
         ctx = dataclasses.replace(ctx, mesh=mesh)
+    spec = None
+    if lossy is not None:
+        from ..optim.compress import LossySpec
+        spec = LossySpec.parse(lossy)
 
     def train_step(params, opt_state, batch):
         with shd.use_rules(mesh, rules):
@@ -160,8 +176,14 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell, *,
                 (loss, metrics), grads = jax.value_and_grad(
                     one_loss, has_aux=True)(params, batch)
                 gscale = 1.0
+            if spec is not None:
+                comp, new_ef = spec.compress(grads, opt_state["ef"])
+                grads = spec.decompress(comp, grads)
+                opt_state = {k: v for k, v in opt_state.items() if k != "ef"}
             new_params, new_opt, om = adamw_update(grads, opt_state, opt,
                                                    grad_scale=gscale)
+            if spec is not None:
+                new_opt["ef"] = new_ef
             metrics = dict(metrics)
             metrics.update(om)
             metrics["loss"] = metrics["loss_sum"] / jnp.maximum(metrics["tokens"], 1.0)
@@ -170,10 +192,12 @@ def make_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeCell, *,
     pshapes = param_shapes(cfg)
     paxes = param_axes(cfg)
     pshard = shd.param_shardings(pshapes, paxes, mesh, rules)
-    oshapes = opt_state_shapes(pshapes)
+    oshapes = opt_state_shapes(pshapes, with_ef=spec is not None)
     oshard = {"step": replicated(mesh),
               "m": pshard, "v": pshard,
               "master": pshard}
+    if spec is not None:
+        oshard["ef"] = pshard
     specs = input_specs(cfg, shape)
     bshard = data_shardings(cfg, mesh, rules, specs)
     mshapes = jax.eval_shape(train_step, pshapes, oshapes, specs)[2]

@@ -39,6 +39,9 @@ class TrainerConfig:
     seq_len: int = 128
     seed: int = 0
     microbatches: int = 1
+    lossy: Optional[str] = None  # grad-compression annotation ("topk:0.01",
+                                 #   "blocktopk:0.001", "int8"); EF residual
+                                 #   rides opt_state["ef"]
     ragged: bool = False   # corpus emits valid_mask; stats fold only real tokens
     moe_impl: str = "replicated"
     ckpt_dir: Optional[str] = None
@@ -56,13 +59,15 @@ def train(tc: TrainerConfig, *, preemption: Optional[PreemptionHandler] = None
     shape = ShapeCell("custom", "train", tc.seq_len, tc.global_batch)
     ctx = RunCtx(mesh=mesh, moe_impl=tc.moe_impl)
     built = make_train_step(cfg, mesh, shape, opt=tc.opt, ctx=ctx,
-                            num_microbatches=tc.microbatches, donate=True)
+                            num_microbatches=tc.microbatches, lossy=tc.lossy,
+                            donate=True)
 
     # init (or restore) state, sharded per the step's in_shardings
     key = jax.random.PRNGKey(tc.seed)
     params, _ = init_params(cfg, key)
     params = jax.device_put(params, built.in_shardings[0])
-    opt_state = jax.device_put(init_opt_state(params), built.in_shardings[1])
+    opt_state = jax.device_put(init_opt_state(params, with_ef=tc.lossy is not None),
+                               built.in_shardings[1])
 
     # data: host-sharded synthetic corpus (+ stub modality context)
     ctx_spec = context_spec(cfg, tc.global_batch)
@@ -146,6 +151,9 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lossy", default=None,
+                    help="gradient compression annotation: topk:R | "
+                         "blocktopk:R | int8 (error feedback in opt state)")
     ap.add_argument("--ragged", action="store_true",
                     help="ragged corpus: whole docs + valid_mask, masked stats")
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -154,7 +162,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     tc = TrainerConfig(arch=args.arch, smoke=not args.full, steps=args.steps,
                        global_batch=args.batch, seq_len=args.seq,
-                       microbatches=args.microbatches, ragged=args.ragged,
+                       microbatches=args.microbatches, lossy=args.lossy,
+                       ragged=args.ragged,
                        model_parallel=args.model_parallel,
                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
     handler = PreemptionHandler()

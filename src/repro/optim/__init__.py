@@ -1,3 +1,7 @@
 """repro.optim — optimizer substrate (AdamW, schedules, grad compression)."""
 from .adamw import (OptConfig, adamw_update, clip_by_global_norm, global_norm,
                     init_opt_state, opt_state_shapes, schedule)
+from .compress import (LossySpec, blocktopk_compress, compressed_bytes,
+                       init_error_state, int8_compress, int8_decompress,
+                       int8_sum_monoid, topk_compress, topk_decompress,
+                       topk_sparse_monoid)

@@ -49,25 +49,35 @@ def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
 
 
-def init_opt_state(params: Pytree) -> Dict[str, Pytree]:
+def init_opt_state(params: Pytree, *, with_ef: bool = False) -> Dict[str, Pytree]:
+    """with_ef adds the error-feedback residual of a ``lossy=`` grad fold
+    (see optim/compress.py) — fold state that must persist across steps, so
+    it lives (and checkpoints) with the optimizer state."""
     f32 = lambda t: jax.tree_util.tree_map(
         lambda x: jnp.zeros(x.shape, jnp.float32), t)
-    return {
+    state = {
         "step": jnp.zeros((), jnp.int32),
         "m": f32(params),
         "v": f32(params),
         "master": jax.tree_util.tree_map(
             lambda x: x.astype(jnp.float32), params),
     }
+    if with_ef:
+        state["ef"] = f32(params)
+    return state
 
 
-def opt_state_shapes(param_shapes: Pytree) -> Dict[str, Pytree]:
+def opt_state_shapes(param_shapes: Pytree, *, with_ef: bool = False
+                     ) -> Dict[str, Pytree]:
     """Abstract opt state (dry-run path)."""
     f32 = lambda t: jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
-    return {"step": jax.ShapeDtypeStruct((), jnp.int32),
-            "m": f32(param_shapes), "v": f32(param_shapes),
-            "master": f32(param_shapes)}
+    state = {"step": jax.ShapeDtypeStruct((), jnp.int32),
+             "m": f32(param_shapes), "v": f32(param_shapes),
+             "master": f32(param_shapes)}
+    if with_ef:
+        state["ef"] = f32(param_shapes)
+    return state
 
 
 def global_norm(tree: Pytree) -> jnp.ndarray:

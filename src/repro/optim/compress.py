@@ -1,34 +1,83 @@
-"""Gradient compression with error feedback (EF14-style).
+"""Gradient compression with error feedback (EF14-style), and the lossy
+monoids that let compressed representations ride the planner's folds.
 
 At multi-pod scale the cross-pod (DCN) all-reduce is the scarce resource.
-Two compressors reduce the bytes a gradient puts on the slow wire:
+Three compressors reduce the bytes a gradient puts on the slow wire:
 
-* ``topk``  — keep the k largest-|g| entries per leaf (values + int32 idx).
-* ``int8``  — per-leaf symmetric scale quantization.
+* ``topk``      — keep the k largest-|g| entries per leaf (values + int32 idx).
+* ``blocktopk`` — keep the largest-|g| entry of each contiguous block (same
+  sparse representation, O(n) selection instead of a sort — the cheap spelling
+  for huge leaves and for per-microbatch compression in the async tier).
+* ``int8``      — per-leaf symmetric scale quantization.
 
-Both use error feedback: e_{t+1} = (g + e_t) - decompress(compress(g + e_t)),
+All use error feedback: e_{t+1} = (g + e_t) - decompress(compress(g + e_t)),
 so the *sum over steps* of applied updates converges to the sum of true
 gradients — the residual rides the gradient Sum monoid rather than being
-dropped (this is why EF converges where plain top-k diverges).
+dropped (this is why EF converges where plain top-k diverges).  The residual
+is computed against what the receiver will actually apply, including the cast
+back to the parameter dtype, so EF stays exact for bf16 params.
 
-The compressed representation of top-k is itself monoid-friendly: two sparse
-(values, idx) sets combine by concatenation + re-top-k
-(``repro.core.monoids.top_k``), which is how a hierarchical DCN reduction
-would combine pod-level sparse gradients without densifying.
+The compressed representations themselves combine as monoids:
+
+* sparse sets combine by concatenation + re-top-k (:func:`topk_sparse_monoid`,
+  fixed capacity k) — how a hierarchical DCN reduction combines pod-level
+  sparse gradients without densifying;
+* int8 tensors combine by dequantize-add-requantize
+  (:func:`int8_sum_monoid`) — associative up to quantization error, which the
+  monoid's ``approx_equal`` bounds by the operand scales.
+
+Both are registered in the monoid registry with law samples, so the CI
+monoid-law step checks them like every other monoid.
+
+:class:`LossySpec` is the planner-facing annotation: parse ``"topk:0.01"`` /
+``"blocktopk:0.001"`` / ``"int8"`` and get compress/decompress/wire-byte
+accounting as one object (``execute_fold(..., lossy=...)``).
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..core.monoid import Monoid
+from ..core.monoids import register_monoid
+
 Pytree = Any
+
+LOSSY_METHODS = ("topk", "blocktopk", "int8")
 
 
 def init_error_state(params: Pytree) -> Pytree:
     return jax.tree_util.tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _clamp_k(size: int, ratio: float) -> int:
+    """k for a leaf of ``size`` entries: never 0, never more than the leaf
+    holds (a ratio on a tiny leaf used to be able to request either)."""
+    return max(1, min(int(size * ratio), size))
+
+
+def _block_shape(size: int, ratio: float) -> Tuple[int, int]:
+    """(num_blocks k, block length) for blocktopk: one survivor per block."""
+    blk = max(1, int(round(1.0 / max(ratio, 1e-12))))
+    blk = min(blk, size)
+    return -(-size // blk), blk          # ceil(size / blk), blk
+
+
+def _ef_residual(acc: jnp.ndarray, idx: jnp.ndarray, kept: jnp.ndarray,
+                 out_dtype) -> jnp.ndarray:
+    """Residual of ``acc`` after the receiver applies ``kept`` at ``idx``.
+
+    The receiver decompresses into ``out_dtype`` (the parameter dtype), so
+    what lands is ``kept`` *after* that cast — for bf16 params the rounding
+    difference must stay in the error state or EF silently leaks mass.
+    """
+    applied = kept.astype(out_dtype).astype(jnp.float32)
+    return acc.at[idx].set(acc[idx] - applied)
 
 
 # -- top-k -------------------------------------------------------------------
@@ -38,10 +87,10 @@ def topk_compress(grads: Pytree, error: Pytree, *, ratio: float = 0.01
     """-> (sparse {values, idx, size} per leaf, new error state)."""
     def one(g, e):
         acc = g.astype(jnp.float32).reshape(-1) + e.reshape(-1)
-        k = max(1, int(acc.size * ratio))
-        vals, idx = jax.lax.top_k(jnp.abs(acc), k)
+        k = _clamp_k(acc.size, ratio)
+        _, idx = jax.lax.top_k(jnp.abs(acc), k)
         kept = acc[idx]
-        new_e = acc.at[idx].set(0.0).reshape(e.shape)
+        new_e = _ef_residual(acc, idx, kept, g.dtype).reshape(e.shape)
         return {"values": kept, "idx": idx.astype(jnp.int32),
                 "size": acc.size}, new_e
 
@@ -53,9 +102,36 @@ def topk_compress(grads: Pytree, error: Pytree, *, ratio: float = 0.01
     return comp, new_error
 
 
+def blocktopk_compress(grads: Pytree, error: Pytree, *, ratio: float = 0.01
+                       ) -> Tuple[Pytree, Pytree]:
+    """Top-1-per-block selection: the O(n) top-k for huge leaves.
+
+    Same sparse {values, idx, size} representation as :func:`topk_compress`,
+    but the survivors are the largest-|g| entry of each contiguous block of
+    ~1/ratio entries — one vectorized argmax pass instead of a sort, which
+    is what makes per-microbatch compression affordable inside the async
+    tier's double-buffered scan.
+    """
+    def one(g, e):
+        acc = g.astype(jnp.float32).reshape(-1) + e.reshape(-1)
+        k, blk = _block_shape(acc.size, ratio)
+        padded = jnp.pad(acc, (0, k * blk - acc.size)).reshape(k, blk)
+        j = jnp.argmax(jnp.abs(padded), axis=1)
+        kept = jnp.take_along_axis(padded, j[:, None], axis=1)[:, 0]
+        idx = jnp.minimum(jnp.arange(k) * blk + j, acc.size - 1).astype(jnp.int32)
+        new_e = _ef_residual(acc, idx, kept, g.dtype).reshape(e.shape)
+        return {"values": kept, "idx": idx, "size": acc.size}, new_e
+
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    eleaves = jax.tree_util.tree_leaves(error)
+    outs = [one(g, e) for g, e in zip(leaves, eleaves)]
+    return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs]))
+
+
 def topk_decompress(comp: Pytree, like: Pytree) -> Pytree:
     def one(c, g):
-        flat = jnp.zeros((c["size"],), jnp.float32).at[c["idx"]].set(c["values"])
+        flat = jnp.zeros((c["size"],), jnp.float32).at[c["idx"]].add(c["values"])
         return flat.reshape(g.shape).astype(g.dtype)
     return jax.tree_util.tree_map(
         one, comp, like,
@@ -69,8 +145,9 @@ def int8_compress(grads: Pytree, error: Pytree) -> Tuple[Pytree, Pytree]:
         acc = g.astype(jnp.float32) + e
         scale = jnp.maximum(jnp.max(jnp.abs(acc)), 1e-12) / 127.0
         q = jnp.clip(jnp.round(acc / scale), -127, 127).astype(jnp.int8)
-        deq = q.astype(jnp.float32) * scale
-        return {"q": q, "scale": scale}, acc - deq
+        # residual vs what the receiver applies AFTER casting to g.dtype
+        applied = (q.astype(jnp.float32) * scale).astype(g.dtype).astype(jnp.float32)
+        return {"q": q, "scale": scale}, acc - applied
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     eleaves = jax.tree_util.tree_leaves(error)
     outs = [one(g, e) for g, e in zip(leaves, eleaves)]
@@ -90,3 +167,182 @@ def compressed_bytes(comp: Pytree) -> int:
         if hasattr(leaf, "dtype"):   # skip python-int metadata ("size")
             total += leaf.size * jnp.dtype(leaf.dtype).itemsize
     return int(total)
+
+
+# ---------------------------------------------------------------------------
+# lossy monoids: the compressed representations ARE monoid values
+# ---------------------------------------------------------------------------
+
+def _sparse_key(vals: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Selection key for re-top-k: |value|, with padding (idx < 0) at -inf
+    so real entries always out-rank unused capacity."""
+    return jnp.where(idx < 0, -jnp.inf, jnp.abs(vals))
+
+
+def _sparse_canon(s) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Canonical (values, idx) ordering — entry multisets compare equal
+    regardless of which bracketing produced them."""
+    order = jnp.lexsort((s["values"], s["idx"]))
+    return s["values"][order], s["idx"][order]
+
+
+def topk_sparse_monoid(k: int) -> Monoid:
+    """Fixed-capacity sparse gradients under concatenate + re-top-k.
+
+    Values are ``{"values": (k,) f32, "idx": (k,) i32}`` with idx -1 marking
+    unused capacity.  Combining keeps the k largest-|value| entries of the
+    union; duplicate indices stay as separate entries (densify with
+    scatter-ADD, so the fold is still a sum).  Exact while total real entries
+    fit in k; beyond that it is *lossy* — the truncated mass is what error
+    feedback exists to recover.
+    """
+    def combine(a, b):
+        v = jnp.concatenate([a["values"], b["values"]], axis=-1)
+        i = jnp.concatenate([a["idx"], b["idx"]], axis=-1)
+        _, pick = jax.lax.top_k(_sparse_key(v, i), k)
+        return {"values": v[pick], "idx": i[pick]}
+
+    def identity_fn(*, example=None):
+        return {"values": jnp.zeros((k,), jnp.float32),
+                "idx": jnp.full((k,), -1, jnp.int32)}
+
+    def approx_equal(a, b):
+        va, ia = _sparse_canon(a)
+        vb, ib = _sparse_canon(b)
+        return bool(jnp.all(ia == ib)
+                    and jnp.allclose(va, vb, rtol=1e-5, atol=1e-6))
+
+    return Monoid(name=f"lossy_topk{k}", combine=combine,
+                  identity_fn=identity_fn, approx_equal=approx_equal)
+
+
+def int8_sum_monoid() -> Monoid:
+    """Quantized tensors under dequantize-add-requantize.
+
+    Values are ``{"q": int8, "scale": f32 ()}``.  Associative up to one
+    quantization step per combine; ``approx_equal`` compares dequantized
+    tensors within a tolerance set by the operand scales.  The identity
+    (q=0, scale=0) is exact, and canonical states (those produced by
+    ``int8_compress``, where max|q| == 127) round-trip exactly.
+    """
+    def deq(s):
+        return s["q"].astype(jnp.float32) * s["scale"]
+
+    def combine(a, b):
+        total = deq(a) + deq(b)
+        scale = jnp.maximum(jnp.max(jnp.abs(total)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(total / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+
+    def identity_fn(*, example=None):
+        if example is None:
+            raise ValueError("int8_sum_monoid identity needs an example "
+                             "(shape-polymorphic); use identity_like")
+        return {"q": jnp.zeros_like(example["q"]),
+                "scale": jnp.zeros_like(example["scale"])}
+
+    def approx_equal(a, b):
+        atol = 2.0 * float(a["scale"] + b["scale"]) + 1e-6
+        return bool(jnp.allclose(deq(a), deq(b), rtol=0.0, atol=atol))
+
+    return Monoid(name="lossy_int8", combine=combine, identity_fn=identity_fn,
+                  approx_equal=approx_equal)
+
+
+def _lossy_topk_samples():
+    m = topk_sparse_monoid(8)
+    def entry(vals, idxs):
+        s = m.identity()
+        v = s["values"].at[:2].set(jnp.asarray(vals, jnp.float32))
+        i = s["idx"].at[:2].set(jnp.asarray(idxs, jnp.int32))
+        return {"values": v, "idx": i}
+    # 2 entries per sample: 3 samples total 6 <= capacity 8, so the law
+    # check exercises the EXACT regime (truncation loss is EF's job, not
+    # associativity's)
+    return [entry((3.0, -1.5), (7, 2)), entry((0.25, 4.0), (1, 5)),
+            entry((-2.0, 0.75), (9, 0))]
+
+
+def _lossy_int8_samples():
+    import numpy as np
+    out = []
+    for seed in (0, 1, 2):
+        x = jnp.asarray(np.random.default_rng(seed).normal(size=(16,))
+                        .astype(np.float32))
+        comp, _ = int8_compress(x, jnp.zeros_like(x))
+        out.append(comp)
+    return out
+
+
+register_monoid(topk_sparse_monoid(8), _lossy_topk_samples)
+register_monoid(int8_sum_monoid(), _lossy_int8_samples)
+
+
+# ---------------------------------------------------------------------------
+# LossySpec — the planner-facing annotation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LossySpec:
+    """A parsed ``lossy=`` annotation: which compressor, how aggressive.
+
+    Accepted spellings (``LossySpec.parse``): ``"topk:0.01"``,
+    ``"blocktopk:0.001"``, ``"int8"`` — or an existing LossySpec.
+    """
+
+    method: str
+    ratio: float = 0.01
+
+    def __post_init__(self):
+        if self.method not in LOSSY_METHODS:
+            raise ValueError(f"unknown lossy method {self.method!r}; "
+                             f"expected one of {LOSSY_METHODS}")
+        if not (0.0 < self.ratio <= 1.0):
+            raise ValueError(f"lossy ratio must be in (0, 1]; got {self.ratio}")
+
+    @classmethod
+    def parse(cls, spec) -> "LossySpec":
+        if isinstance(spec, LossySpec):
+            return spec
+        if not isinstance(spec, str):
+            raise TypeError(f"lossy= expects a string or LossySpec; got "
+                            f"{type(spec).__name__}")
+        method, _, arg = spec.partition(":")
+        if method == "int8":
+            return cls(method="int8", ratio=1.0)
+        return cls(method=method, ratio=float(arg) if arg else 0.01)
+
+    def describe(self) -> str:
+        if self.method == "int8":
+            return "int8"
+        return f"{self.method}:{self.ratio:g}"
+
+    # -- compress / decompress ----------------------------------------------
+    def compress(self, grads: Pytree, error: Optional[Pytree] = None
+                 ) -> Tuple[Pytree, Pytree]:
+        if error is None:
+            error = init_error_state(grads)
+        if self.method == "topk":
+            return topk_compress(grads, error, ratio=self.ratio)
+        if self.method == "blocktopk":
+            return blocktopk_compress(grads, error, ratio=self.ratio)
+        return int8_compress(grads, error)
+
+    def decompress(self, comp: Pytree, like: Pytree) -> Pytree:
+        if self.method == "int8":
+            return int8_decompress(comp, like)
+        return topk_decompress(comp, like)
+
+    # -- byte accounting (shape-only; works on ShapeDtypeStructs) ------------
+    def leaf_wire_bytes(self, size: int) -> int:
+        if self.method == "int8":
+            return size * 1 + 4
+        if self.method == "blocktopk":
+            k, _ = _block_shape(size, self.ratio)
+        else:
+            k = _clamp_k(size, self.ratio)
+        return k * 8          # f32 value + i32 index per survivor
+
+    def wire_bytes(self, like: Pytree) -> int:
+        return int(sum(self.leaf_wire_bytes(int(math.prod(leaf.shape)) or 1)
+                       for leaf in jax.tree_util.tree_leaves(like)))

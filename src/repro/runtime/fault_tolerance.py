@@ -110,10 +110,30 @@ class ElasticController:
         self.on_remesh = on_remesh
         self.current = plan_remesh(total_devices, model_parallel=model_parallel,
                                    pods=pods)
+        self.suspects: List[int] = []   # overlap-collapse early warnings
+        self._downed: set = set()       # hosts already counted as failed
 
     def report_failure(self, num_devices: int) -> Optional[MeshPlan]:
         self.healthy = max(0, self.healthy - num_devices)
         return self._maybe_remesh()
+
+    def ingest(self, report: StragglerReport, *,
+               devices_per_host: int = 1) -> Optional[MeshPlan]:
+        """Consume a :class:`StragglerReport` (from ``observe_stats``).
+
+        Hosts flagged slow (EWMA past threshold for ``patience`` steps) are
+        treated as failed and may trigger a re-mesh; hosts whose overlap
+        merely collapsed this step become ``suspects`` — the pre-timeout
+        warning a scheduler acts on (drain, re-balance input shards) without
+        yet shrinking the mesh.
+        """
+        self.suspects = sorted(set(report.collapsing_hosts)
+                               - set(report.slow_hosts) - self._downed)
+        newly = [h for h in report.slow_hosts if h not in self._downed]
+        if not newly:
+            return None
+        self._downed.update(newly)
+        return self.report_failure(len(newly) * devices_per_host)
 
     def report_recovery(self, num_devices: int) -> Optional[MeshPlan]:
         self.healthy = min(self.total, self.healthy + num_devices)
@@ -144,6 +164,13 @@ class StragglerReport:
     slow_hosts: List[int]
     median_s: float
     threshold_s: float
+    # hosts whose measured shuffle overlap collapsed below the model this
+    # step — the EARLY signal: a slow host drags the pipelined DCN crossing
+    # out from under everyone's compute (overlap fraction drops fleet-wide,
+    # worst at the culprit) several steps before its EWMA step time trips
+    # the timeout threshold above.  Empty when stats carry no overlap data.
+    collapsing_hosts: List[int] = dataclasses.field(default_factory=list)
+    median_overlap: Optional[float] = None
 
 
 class StragglerMonitor:
@@ -158,10 +185,15 @@ class StragglerMonitor:
     """
 
     def __init__(self, num_hosts: int, *, alpha: float = 0.3,
-                 ratio: float = 1.5, patience: int = 3):
+                 ratio: float = 1.5, patience: int = 3,
+                 collapse_ratio: float = 0.5):
         self.alpha = alpha
         self.ratio = ratio
         self.patience = patience
+        # a host whose measured overlap falls below collapse_ratio x its
+        # modeled overlap is flagged immediately (no patience): overlap
+        # collapse is a leading indicator, timeouts a trailing one
+        self.collapse_ratio = collapse_ratio
         self.ewma = [0.0] * num_hosts
         self.strikes = [0] * num_hosts
         self.step = 0
@@ -183,6 +215,35 @@ class StragglerMonitor:
                 self.strikes[i] = 0
         return StragglerReport(step=self.step, slow_hosts=slow,
                                median_s=med, threshold_s=thr)
+
+    def observe_stats(self, per_host_stats: Sequence) -> StragglerReport:
+        """Feed one ``core.mapreduce.ShuffleStats`` per host for this step.
+
+        Step times come from ``measured_us`` (falling back to the model when
+        a host reported none) and flow through the EWMA/patience machinery
+        of :meth:`observe`.  Additionally, hosts running an overlapped
+        (async) plan whose ``overlap_measured`` fell below
+        ``collapse_ratio x overlap_modeled`` are flagged as collapsing THIS
+        step — the same per-step record the benchmarks emit doubles as the
+        health signal, and a struggling host is visible here while its step
+        time is still inside the timeout threshold.
+        """
+        times = [
+            (s.measured_us if s.measured_us is not None else s.predicted_us)
+            / 1e6
+            for s in per_host_stats]
+        report = self.observe(times)
+        collapsing = []
+        overlaps = []
+        for i, s in enumerate(per_host_stats):
+            if s.overlap_modeled > 0.0 and s.overlap_measured is not None:
+                overlaps.append(s.overlap_measured)
+                if s.overlap_measured < self.collapse_ratio * s.overlap_modeled:
+                    collapsing.append(i)
+        report.collapsing_hosts = collapsing
+        if overlaps:
+            report.median_overlap = sorted(overlaps)[len(overlaps) // 2]
+        return report
 
 
 # ---------------------------------------------------------------------------

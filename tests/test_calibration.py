@@ -178,3 +178,43 @@ def test_roofline_calibrate_quick_produces_loadable_table(tmp_path):
                   segment_ids=jnp.zeros((32,), jnp.int32), num_segments=4,
                   calibration=loaded)
     assert p.predicted_us > 0
+
+
+# -- the bench-gate logic in benchmarks/run.py --------------------------------
+
+def test_overlap_rows_gate():
+    """check_overlap_rows: auto must track sync_dense, lossy bytes must
+    undercut dense bytes — and the gate stays silent when the overlap
+    section did not run (no 8-device mesh locally)."""
+    import importlib
+    run = importlib.import_module("benchmarks.run")
+
+    def rows(auto, sync, dense=None, lossy=None):
+        out = [{"name": "overlap_step_us/auto", "us_per_call": auto},
+               {"name": "overlap_step_us/sync_dense", "us_per_call": sync}]
+        if dense is not None:
+            out += [{"name": "overlap_bytes/dense", "us_per_call": dense},
+                    {"name": "overlap_bytes/lossy", "us_per_call": lossy}]
+        return out
+
+    assert run.check_overlap_rows([]) == []                    # section skipped
+    assert run.check_overlap_rows(rows(100.0, 100.0)) == []
+    assert run.check_overlap_rows(rows(109.0, 100.0)) == []    # inside 1.10x
+    bad = run.check_overlap_rows(rows(150.0, 100.0))
+    assert len(bad) == 1 and "auto" in bad[0]
+    assert run.check_overlap_rows(rows(100.0, 100.0, 4096.0, 80.0)) == []
+    bad = run.check_overlap_rows(rows(100.0, 100.0, 4096.0, 4096.0))
+    assert len(bad) == 1 and "bytes" in bad[0]
+
+
+def test_overlap_step_rows_are_regression_guarded():
+    """overlap_step rows ride the same --compare gate as the other hot
+    paths: a >tolerance slowdown vs the rolling baseline is a failure."""
+    import importlib
+    run = importlib.import_module("benchmarks.run")
+    assert any(p == "overlap_step" for p in run.GUARDED_PREFIXES)
+    old = [{"name": "overlap_step_us/auto", "us_per_call": 100.0}]
+    new = [{"name": "overlap_step_us/auto", "us_per_call": 130.0}]
+    assert run.compare_rows(new, old) == [
+        ("overlap_step_us/auto", 100.0, 130.0)]
+    assert run.compare_rows(old, old) == []

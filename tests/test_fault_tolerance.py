@@ -1,0 +1,177 @@
+"""Stats-driven fault tolerance: the per-step ShuffleStats record (the same
+one the benchmarks emit) feeding the straggler monitor and the elastic
+controller.
+
+The property under test is the ISSUE's early-warning story: a slow host
+shows up as COLLAPSING OVERLAP (measured overlap fraction far below the
+plan's model) while its step time is still inside the timeout threshold —
+the monitor flags it immediately, the controller records it as a suspect,
+and only a sustained slowdown later escalates to a re-mesh.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import monoids, plan_fold
+from repro.core.mapreduce import fold_stats
+from repro.runtime.fault_tolerance import (ElasticController,
+                                           StragglerMonitor,
+                                           checkpoint_interval, plan_remesh)
+
+_SIZES = {"x": 4, "pod": 2}
+
+
+def _plan(layout="async", n_mb=4, d=1024, lossy=None):
+    shape = jax.ShapeDtypeStruct((n_mb, d), jnp.float32)
+    return plan_fold(monoids.sum_, shape, mesh_axes=("x", "pod"),
+                     layout=layout, axis_sizes=_SIZES, lossy=lossy)
+
+
+# ---------------------------------------------------------------------------
+# fold_stats: the Plan -> ShuffleStats bridge
+# ---------------------------------------------------------------------------
+
+def test_fold_stats_reads_async_plan_annotations():
+    stats = fold_stats(_plan("async"))
+    assert stats.overlap_modeled > 0.0          # the plan promises hiding
+    assert stats.shuffle_values == 4            # one crossing per microbatch
+    assert stats.overlap_measured is None       # nothing observed yet
+    assert stats.overlap_collapse() is None
+    got = stats.with_measured(123.0, overlap=0.05)
+    assert got.measured_us == 123.0
+    np.testing.assert_allclose(got.overlap_collapse(),
+                               stats.overlap_modeled - 0.05)
+
+
+def test_fold_stats_sync_plan_has_no_overlap():
+    stats = fold_stats(_plan("scan"))
+    assert stats.overlap_modeled == 0.0
+    assert stats.shuffle_values == 1            # one crossing, full sum
+
+
+def test_fold_stats_lossy_compression_ratio():
+    stats = fold_stats(_plan("scan", lossy="topk:0.01"))
+    assert 0 < stats.lossy_wire_bytes < stats.dense_wire_bytes
+    assert stats.compression_ratio() > 1.0
+    assert stats.lossy == "topk:0.01"
+    dense = fold_stats(_plan("scan"))
+    assert dense.compression_ratio() == 1.0
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor.observe_stats: overlap collapse leads, timeout trails
+# ---------------------------------------------------------------------------
+
+def _host_stats(base, *, measured_us, overlap):
+    return [base.with_measured(us, overlap=ov)
+            for us, ov in zip(measured_us, overlap)]
+
+
+def test_collapse_flagged_while_step_time_still_healthy():
+    base = fold_stats(_plan("async"))
+    modeled = base.overlap_modeled
+    mon = StragglerMonitor(4, patience=3, collapse_ratio=0.5)
+    # equal step times, but host 2's measured overlap is a tenth of the
+    # model: flagged as collapsing on the FIRST step, with slow_hosts empty
+    report = mon.observe_stats(_host_stats(
+        base, measured_us=[1e6] * 4,
+        overlap=[modeled, modeled, 0.1 * modeled, modeled]))
+    assert report.collapsing_hosts == [2]
+    assert report.slow_hosts == []
+    assert report.median_overlap == pytest.approx(modeled)
+
+
+def test_sustained_slowdown_escalates_to_slow_after_patience():
+    base = fold_stats(_plan("async"))
+    modeled = base.overlap_modeled
+    mon = StragglerMonitor(4, patience=3, collapse_ratio=0.5)
+    reports = []
+    for _ in range(6):
+        reports.append(mon.observe_stats(_host_stats(
+            base, measured_us=[1e6, 1e6, 8e6, 1e6],
+            overlap=[modeled, modeled, 0.0, modeled])))
+    # the collapse signal fires from step 1; the timeout only after the
+    # EWMA has crossed the threshold for `patience` consecutive steps
+    assert reports[0].collapsing_hosts == [2]
+    assert reports[0].slow_hosts == []
+    assert reports[-1].slow_hosts == [2]
+
+
+def test_observe_stats_falls_back_to_modeled_time():
+    base = fold_stats(_plan("async"))
+    stats = [base.with_measured(2e6), base, base, base]   # 3 hosts silent
+    mon = StragglerMonitor(4, patience=1)
+    report = mon.observe_stats(stats)
+    # silent hosts contribute predicted_us; the loud host's 2s EWMA is
+    # far past 1.5x the (tiny) modeled median, so it is flagged at once
+    assert report.slow_hosts == [0]
+
+
+def test_sync_stats_never_flag_collapse():
+    base = fold_stats(_plan("scan"))                      # overlap_modeled 0
+    mon = StragglerMonitor(2)
+    report = mon.observe_stats(_host_stats(
+        base, measured_us=[1e6, 1e6], overlap=[0.0, 0.0]))
+    assert report.collapsing_hosts == []
+    assert report.median_overlap is None
+
+
+# ---------------------------------------------------------------------------
+# ElasticController.ingest: suspects first, re-mesh only on escalation
+# ---------------------------------------------------------------------------
+
+def test_ingest_records_suspects_without_remesh():
+    base = fold_stats(_plan("async"))
+    modeled = base.overlap_modeled
+    mon = StragglerMonitor(4, patience=3)
+    ctl = ElasticController(64, model_parallel=16, on_remesh=None)
+    shape_before = ctl.current.shape
+    report = mon.observe_stats(_host_stats(
+        base, measured_us=[1e6] * 4,
+        overlap=[modeled, modeled, 0.1 * modeled, modeled]))
+    assert ctl.ingest(report) is None           # warning only
+    assert ctl.suspects == [2]
+    assert ctl.current.shape == shape_before
+
+
+def test_ingest_escalation_downs_host_once():
+    base = fold_stats(_plan("async"))
+    modeled = base.overlap_modeled
+    mon = StragglerMonitor(4, patience=2)
+    remeshes = []
+    ctl = ElasticController(64, model_parallel=16,
+                            on_remesh=lambda p: remeshes.append(p))
+    plan = None
+    for _ in range(4):
+        report = mon.observe_stats(_host_stats(
+            base, measured_us=[1e6, 1e6, 9e6, 1e6],
+            overlap=[modeled, modeled, 0.0, modeled]))
+        out = ctl.ingest(report, devices_per_host=16)
+        plan = out or plan
+    assert plan is not None and plan.shape == (2, 16)     # 64-16 devices
+    assert len(remeshes) == 1                   # the downed host counts once
+    assert ctl.suspects == []                   # slow supersedes suspect
+
+
+def test_plan_remesh_unrecoverable_vs_minimal():
+    assert plan_remesh(15, model_parallel=16) is None
+    minimal = plan_remesh(16, model_parallel=16)
+    assert minimal is not None and minimal.shape == (1, 16)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint cadence: derived, not hard-coded
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_interval_young_daly_math():
+    # MTBF_system = 24h * 3600 / 1000 nodes = 86.4s;
+    # t_opt = sqrt(2 * 30 * 86.4) = 72s; at 2s steps -> 36
+    assert checkpoint_interval(2.0, mtbf_hours=24.0, num_nodes=1000,
+                               write_time_s=30.0) == 36
+    # cadence never drops below one step, whatever the numbers say
+    assert checkpoint_interval(1e9, mtbf_hours=1.0, num_nodes=10**6) == 1
+    # fewer nodes -> longer system MTBF -> sparser checkpoints
+    sparse = checkpoint_interval(2.0, num_nodes=10)
+    dense = checkpoint_interval(2.0, num_nodes=1000)
+    assert sparse > dense

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 from _hyp import given, settings, st  # hypothesis, or skip-stub when absent
 
+import repro.optim  # noqa: F401  (registers the lossy compression monoids)
 from repro.core import monoids, check_laws
 from repro.core.monoid import Monoid, MonoidTypeError, check_structure
 
@@ -156,3 +157,48 @@ def test_structure_check_rejects_shape_change():
                  identity_fn=lambda *, example=None: jnp.zeros((2,)))
     with pytest.raises(MonoidTypeError):
         check_structure(bad, jnp.zeros((2,)), jnp.zeros((2,)))
+
+
+# ---------------------------------------------------------------------------
+# discovery-driven law suite: EVERY registered monoid, including the lossy
+# compression monoids optim/compress.py registers on import.  CI runs this
+# file as its own named step, so "monoid X broke the laws" is the failure
+# headline, not a line buried in the tier-1 run.
+# ---------------------------------------------------------------------------
+
+def test_no_registered_monoid_ships_law_unchecked():
+    missing = monoids.missing_law_samples()
+    assert not missing, (
+        f"monoids registered WITHOUT law samples: {missing}. Every "
+        "register_monoid() call must pass a zero-arg sample provider — a "
+        "monoid whose laws are never checked cannot license combiners, "
+        "re-bracketing, or the async fold's re-ordering.")
+
+
+@pytest.mark.parametrize("name", sorted(monoids.REGISTRY))
+def test_registered_monoid_laws(name):
+    m = monoids.REGISTRY[name]
+    provider = monoids.law_samples_for(name)
+    assert provider is not None, f"{name}: no law samples registered"
+    samples = provider()
+    assert len(samples) >= 3, (
+        f"{name}: associativity needs >= 3 distinct operands, got "
+        f"{len(samples)}")
+    check_laws(m, samples)
+
+
+def test_law_breaking_monoid_fails_the_suite():
+    """Subtraction is not associative — the exact check the suite runs on
+    every registered monoid must reject it (the deliberate red test: if
+    this passes, the law step is checking nothing)."""
+    bad = Monoid(name="bad_subtract", combine=lambda a, b: a - b,
+                 identity_fn=lambda *, example=None: jnp.zeros(
+                     jnp.shape(example) if example is not None else ()))
+    with pytest.raises(AssertionError):
+        check_laws(bad, [jnp.float32(1.0), jnp.float32(2.0),
+                         jnp.float32(3.0)])
+
+
+def test_registry_rejects_silent_shadowing():
+    with pytest.raises(ValueError):
+        monoids.register_monoid(monoids.sum_, lambda: [])

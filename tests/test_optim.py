@@ -2,10 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.optim import (OptConfig, adamw_update, clip_by_global_norm,
                          global_norm, init_opt_state, schedule)
-from repro.optim.compress import (compressed_bytes, init_error_state,
+from repro.optim.compress import (LossySpec, blocktopk_compress,
+                                  compressed_bytes, init_error_state,
                                   int8_compress, int8_decompress,
                                   topk_compress, topk_decompress)
 from repro.core.aggregation import grad_accum_fold
@@ -83,6 +85,87 @@ def test_int8_compress_roundtrip_accuracy():
     assert float(jnp.max(jnp.abs(deq - g["w"]))) <= scale / 127 + 1e-6
     np.testing.assert_allclose(np.asarray(deq + err["w"]), np.asarray(g["w"]),
                                rtol=1e-5, atol=1e-6)
+
+
+def test_topk_kclamp_edge_cases():
+    """ratio on a tiny leaf must never request k=0 or k>size (regression:
+    int(3 * 0.01) == 0 used to produce an empty top_k)."""
+    err = {"w": jnp.zeros((3,))}
+    for ratio in (0.01, 0.5, 1.0):
+        comp, new_e = topk_compress({"w": jnp.asarray([1.0, -2.0, 0.5])},
+                                    err, ratio=ratio)
+        k = comp["w"]["values"].shape[0]
+        assert 1 <= k <= 3, (ratio, k)
+    # ratio=1.0 keeps everything: the round-trip is exact and EF is zero
+    g = {"w": jnp.asarray([1.0, -2.0, 0.5])}
+    comp, new_e = topk_compress(g, err, ratio=1.0)
+    np.testing.assert_array_equal(np.asarray(topk_decompress(comp, g)["w"]),
+                                  np.asarray(g["w"]))
+    np.testing.assert_array_equal(np.asarray(new_e["w"]), np.zeros(3))
+
+
+def test_blocktopk_non_divisible_sizes():
+    """Block selection on sizes that don't divide the block length: indices
+    stay in range and the EF invariant holds."""
+    rng = np.random.default_rng(3)
+    for size in (5, 17, 100):
+        g = {"w": jnp.asarray(rng.normal(size=(size,)).astype(np.float32))}
+        err = init_error_state(g)
+        comp, new_e = blocktopk_compress(g, err, ratio=0.3)
+        idx = np.asarray(comp["w"]["idx"])
+        assert idx.min() >= 0 and idx.max() < size, (size, idx)
+        applied = topk_decompress(comp, g)["w"]
+        np.testing.assert_allclose(np.asarray(applied + new_e["w"]),
+                                   np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("method", ["topk", "blocktopk", "int8"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ef_exact_for_param_dtype(method, dtype):
+    """The EF residual is computed against what the receiver applies AFTER
+    the cast to the parameter dtype — so applied + residual == truth to the
+    last bit, in bf16 as in f32 (regression: the residual used to be taken
+    against the f32 values, leaking the bf16 rounding every step)."""
+    rng = np.random.default_rng(4)
+    spec = LossySpec.parse(method if method == "int8" else f"{method}:0.25")
+    g = {"w": jnp.asarray(rng.normal(size=(32,)).astype(np.float32)).astype(dtype)}
+    err = init_error_state(g)
+    acc_f32 = jnp.asarray(np.asarray(g["w"].astype(jnp.float32)))
+    comp, new_e = spec.compress(g, err)
+    applied = spec.decompress(comp, g)["w"].astype(jnp.float32)
+    diff = np.abs(np.asarray(applied + new_e["w"] - acc_f32))
+    assert diff.max() == 0.0, (method, dtype, diff.max())
+
+
+def test_lossy_spec_parse_and_wire_bytes():
+    assert LossySpec.parse("topk:0.1") == LossySpec("topk", 0.1)
+    assert LossySpec.parse("int8").method == "int8"
+    assert LossySpec.parse(LossySpec("blocktopk", 0.5)).ratio == 0.5
+    with pytest.raises(ValueError):
+        LossySpec.parse("gzip:0.1")
+    with pytest.raises(ValueError):
+        LossySpec("topk", 0.0)
+    with pytest.raises(TypeError):
+        LossySpec.parse(3)
+    like = {"w": jax.ShapeDtypeStruct((1000,), jnp.float32)}
+    assert LossySpec.parse("topk:0.01").wire_bytes(like) == 10 * 8
+    assert LossySpec.parse("int8").wire_bytes(like) == 1000 + 4
+    # the annotation must beat the dense crossing for it to be worth wiring
+    assert LossySpec.parse("topk:0.01").wire_bytes(like) < 1000 * 4
+
+
+def test_opt_state_with_ef_persists_through_update():
+    """The steps.py pattern: pop 'ef' around adamw_update (which rebuilds
+    the state dict) and push the new residual back in."""
+    params = {"w": jnp.asarray([1.0, -1.0])}
+    opt = init_opt_state(params, with_ef=True)
+    assert "ef" in opt
+    ef = opt.pop("ef")
+    g = {"w": jnp.asarray([0.5, 0.25])}
+    _, new_opt, _ = adamw_update(g, opt, OptConfig())
+    assert "ef" not in new_opt          # adamw_update drops unknown keys
+    new_opt["ef"] = ef
+    assert set(new_opt) == {"step", "m", "v", "master", "ef"}
 
 
 def test_ef_sgd_converges_on_quadratic():

@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 from _hyp import given, settings, st  # hypothesis, or skip-stub when absent
 
+import repro.optim  # noqa: F401  (registers the lossy compression monoids)
 from repro.core import execute_fold, local_fold, monoids, plan_fold
 from repro.core.monoid import _KERNEL_LOWERINGS
 from repro.core.plan import (_segment_fold_generic, collective_algorithm,
@@ -256,7 +257,20 @@ def test_flat_tiers_match_local_fold(name, layout):
     elif name == "affine_scan":
         values = (jnp.asarray(rng.uniform(0.5, 1.0, n).astype(np.float32)), x)
     else:
-        pytest.skip(f"no sample builder for {name}")
+        # everything else (sketches, top-k, the lossy compression states):
+        # stack the monoid's own registered law samples and compare under
+        # its own equality — requantizing monoids are only associative up
+        # to their approx_equal, not elementwise
+        provider = monoids.law_samples_for(name)
+        if provider is None:
+            pytest.skip(f"no sample builder for {name}")
+        samples = provider()
+        values = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves), *samples)
+        got = execute_fold(m, values, layout=layout)
+        want = local_fold(m, values, strategy="tree")
+        assert m.equal(got, want), (name, layout, got, want)
+        return
     got = execute_fold(m, values, layout=layout)
     want = local_fold(m, values, strategy="tree")
     _assert_tree_close(m, got, want)
@@ -670,3 +684,101 @@ def test_auto_argmin_deterministic_zoo(name, winner, monkeypatch):
             name, winner, backend, cand)
         if backend == "cpu":
             assert "kernel" not in cand
+
+
+# ---------------------------------------------------------------------------
+# the async tier and the lossy annotation (planning; execution at mesh scale
+# lives in test_distributed.py)
+# ---------------------------------------------------------------------------
+
+_ASYNC_SIZES = {"x": 4, "pod": 2}
+
+
+def _flat_mb_shape(n_mb=4, d=256):
+    return jax.ShapeDtypeStruct((n_mb, d), jnp.float32)
+
+
+def test_forced_async_plan_shape():
+    p = plan_fold(monoids.sum_, _flat_mb_shape(), mesh_axes=("x", "pod"),
+                  layout="async", axis_sizes=_ASYNC_SIZES)
+    assert p.local_tier.kind == "async"
+    assert len(p.tiers) == 1                 # the whole plan IS the pipeline
+    assert p.overlap_modeled > 0.0
+    assert dict(p.plan_candidate_us).keys() == {"sync", "async"}
+    assert "overlap modeled" in p.describe()
+
+
+def test_auto_declines_async_for_pure_grad_fold():
+    """Per-microbatch crossings replicate the summed bytes n times and the
+    epilogue crossing can never hide — so for a pure grad fold the honest
+    model keeps choosing sync, with the async price on the record."""
+    p = plan_fold(monoids.sum_, _flat_mb_shape(), mesh_axes=("x", "pod"),
+                  layout="auto", axis_sizes=_ASYNC_SIZES)
+    assert p.local_tier.kind != "async"
+    cand = dict(p.plan_candidate_us)
+    assert cand["sync"] <= cand["async"]
+
+
+def test_async_layout_errors_are_actionable():
+    vals = jnp.zeros((4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="mesh_axes"):
+        plan_fold(monoids.sum_, vals, layout="async")
+    with pytest.raises(ValueError, match="keyed"):
+        plan_fold(monoids.sum_, vals, layout="async",
+                  mesh_axes=("x",), axis_sizes={"x": 4},
+                  segment_ids=jnp.zeros((4,), jnp.int32), num_segments=2)
+
+
+def test_lossy_plan_prices_compressed_crossing():
+    dense = plan_fold(monoids.sum_, _flat_mb_shape(), mesh_axes=("x", "pod"),
+                      layout="scan", axis_sizes=_ASYNC_SIZES)
+    lossy = plan_fold(monoids.sum_, _flat_mb_shape(), mesh_axes=("x", "pod"),
+                      layout="scan", axis_sizes=_ASYNC_SIZES, lossy="topk:0.01")
+    assert lossy.lossy == "topk:0.01"
+    assert 0 < lossy.lossy_wire_bytes < lossy.dense_wire_bytes
+    assert lossy.dense_wire_bytes == dense.dense_wire_bytes
+    assert dense.lossy_wire_bytes == dense.dense_wire_bytes   # dense == dense
+    assert "lossy" in lossy.describe()
+    # only the DCN tier moves compressed bytes; the ICI combine stays dense
+    dcn = [t for t in lossy.tiers if t.kind == "allreduce" and
+           t.detail.startswith("dcn:")]
+    assert dcn and "lossy" in dcn[0].detail
+
+
+def test_lossy_annotation_errors_are_actionable():
+    vals = jnp.zeros((4, 8), jnp.float32)
+    with pytest.raises(ValueError, match="keyed"):
+        plan_fold(monoids.sum_, vals, mesh_axes=("x",), axis_sizes={"x": 4},
+                  segment_ids=jnp.zeros((4,), jnp.int32), num_segments=2,
+                  lossy="topk:0.01")
+    with pytest.raises(ValueError, match="additive"):
+        plan_fold(monoids.max_, vals, mesh_axes=("x",), axis_sizes={"x": 4},
+                  lossy="topk:0.01")
+
+
+def test_async_and_lossy_execute_single_device():
+    """1-device smoke of both execution paths (the real 8-device equality
+    checks live in test_distributed.py): the async pipeline and the lossy
+    sync crossing both run inside shard_map and return the exact / the
+    EF-consistent sum."""
+    mesh = jax.make_mesh((1, 1), ("x", "pod"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    vals = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    want = np.asarray(vals.sum(0))
+    spec = jax.sharding.PartitionSpec(("x", "pod"))
+
+    def run(fn):
+        return jax.shard_map(
+            lambda v: fn(v), mesh=mesh, in_specs=spec,
+            out_specs=jax.sharding.PartitionSpec(), check_vma=False)(vals)
+
+    out = run(lambda v: execute_fold(monoids.sum_, v,
+                                     mesh_axes=("x", "pod"), layout="async"))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
+
+    def lossy_body(v):
+        out, ef = execute_fold(monoids.sum_, v, mesh_axes=("x", "pod"),
+                               layout="scan", lossy="topk:0.5")
+        return out + ef          # EF invariant: applied + residual == truth
+
+    np.testing.assert_allclose(np.asarray(run(lossy_body)), want, rtol=1e-5)
