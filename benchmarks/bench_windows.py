@@ -1,0 +1,84 @@
+"""Windowed streaming throughput: two-stacks windows + planner-lowered folds.
+
+Rows are **microseconds per event** (so the ``--compare`` regression gate
+points the right way: bigger == slower), with events/s in the derived
+column.  The headline ``window_events_per_sec`` row is the two-stacks
+sliding-window push+query path — one amortized monoid combine per event —
+and is guarded by ``run.py --compare`` alongside the batch
+``tumbling_fold``/``session_fold`` rows (ONE planner-lowered keyed fold
+over the whole stream).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import monoids
+from repro.data.windows import (SlidingWindow, session_fold, sessionize,
+                                tumbling_fold)
+
+from .common import row, time_fn
+
+
+def _stream_rate(window: SlidingWindow, values, *, query_every: int = 8):
+    """Push the whole stream (querying every few events), return us/event."""
+    t0 = time.perf_counter()
+    for i, v in enumerate(values):
+        window.push(v)
+        if i % query_every == 0:
+            window.query()
+    jax.block_until_ready(window.query())
+    return (time.perf_counter() - t0) / len(values) * 1e6
+
+
+def bench_sliding(n: int = 1500, size: int = 64) -> None:
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(x) for x in rng.normal(size=n).astype(np.float32)]
+    w = SlidingWindow(monoids.sum_, size)
+    us = _stream_rate(w, xs)
+    row("window_events_per_sec", us,
+        f"{1e6 / us:.0f} events/s sliding sum w={size} "
+        f"({w.flip_combines / w.pushes:.2f} flip combines/event)")
+
+    m = monoids.count_min(2, 64)
+    items = [m.lift(jnp.asarray(x, jnp.int32))
+             for x in rng.integers(0, 1000, 200)]
+    w = SlidingWindow(m, 16)
+    us = _stream_rate(w, items)
+    row("window_events/sliding_cms", us,
+        f"{1e6 / us:.0f} events/s sliding cms(2,64) w=16")
+
+
+def bench_batch_folds(n: int = 4096) -> None:
+    rng = np.random.default_rng(1)
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    ts = jnp.asarray(np.sort(rng.uniform(0, 64, n)).astype(np.float32))
+
+    fold = jax.jit(lambda v, t: tumbling_fold(
+        monoids.sum_, v, t, width=1.0, num_windows=64))
+    us = time_fn(fold, vals, ts)
+    row("window_events/tumbling_fold", us,
+        f"{n} events -> 64 windows, {n / us * 1e6:.0f} events/s "
+        "(one keyed fold)")
+
+    users = rng.integers(0, 32, n)
+    sids, nsess = sessionize(users, np.sort(rng.uniform(0, 600, n)), gap=5.0)
+    sfold = jax.jit(lambda v, s: session_fold(
+        monoids.sum_, v, s, nsess))
+    us = time_fn(sfold, vals, jnp.asarray(sids))
+    row("window_events/session_fold", us,
+        f"{n} events -> {nsess} sessions, {n / us * 1e6:.0f} events/s "
+        "(one keyed fold)")
+
+
+def main() -> None:
+    bench_sliding()
+    bench_batch_folds()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

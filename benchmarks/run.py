@@ -22,13 +22,13 @@ import sys
 
 from . import (bench_aggregation, bench_kernels, bench_mapreduce,
                bench_overlap, bench_plan, bench_serve, bench_sketches,
-               bench_train)
+               bench_train, bench_windows)
 from . import common
 
 # rows guarded by --compare: the planner-lowered hot paths + the serve tier
-# + the overlap section's step rows
+# + the overlap section's step rows + the windowed-streaming event rates
 GUARDED_PREFIXES = ("segment_fold", "mean_by_key", "plan_auto", "serve_",
-                    "overlap_step")
+                    "overlap_step", "window_events")
 REGRESSION_TOLERANCE = 1.20   # fail on >20% slower than the previous artifact
 # intra-run gate: layout='auto' must stay within this factor of the BEST
 # forced layout for the same case — the cost model may not mis-place a fold
@@ -152,6 +152,8 @@ def main(argv=None) -> int:
         bench_plan.main()
         print("# -- sketch monoids (paper section 3) ----------------------------")
         bench_sketches.main()
+        print("# -- windowed streaming: two-stacks + keyed window folds ---------")
+        bench_windows.main()
         if not args.quick:
             print("# -- Pallas kernels vs XLA refs (interpret mode on CPU) ----------")
             bench_kernels.main()

@@ -453,6 +453,99 @@ def cooccurrence_stripes(tokens: jnp.ndarray, vocab: int, window: int) -> jnp.nd
     return mat
 
 # ---------------------------------------------------------------------------
+# exponential time-decay monoids — windowed streaming analytics
+# ---------------------------------------------------------------------------
+# State = (value, anchor_time): `value` is the decayed aggregate AS OF
+# `anchor_time` (the latest event time folded in).  combine re-anchors both
+# sides to the later time and merges — associative because the decayed
+# aggregate is sum_i/max_i of x_i * 2^-((t - t_i)/half_life) and re-scaling
+# by a common exp factor commutes with + and max.  The identity anchors at
+# t = -inf with value 0: its decay weight to ANY finite time is exactly 0,
+# so it is a two-sided unit (unlike an identity anchored at t=0, which
+# re-weights values with earlier timestamps — the red test in
+# tests/test_windows.py pins that failure mode).
+
+
+def _decay_weight(t_from: jnp.ndarray, t_to: jnp.ndarray,
+                  lam: float) -> jnp.ndarray:
+    """exp(-lam*(t_to - t_from)) with the convention weight(-inf -> t) = 0.
+
+    The where() guard keeps the identity exact: exp(-inf - -inf) would be
+    NaN in the untaken branch, but the literal 0.0 is selected instead.
+    """
+    t_from = jnp.asarray(t_from, jnp.float32)
+    return jnp.where(jnp.isneginf(t_from), jnp.float32(0.0),
+                     jnp.exp(-lam * (jnp.asarray(t_to, jnp.float32) - t_from)))
+
+
+def _decay_combine(lam: float, op):
+    def combine(a, b):
+        (va, ta), (vb, tb) = a, b
+        t = jnp.maximum(jnp.asarray(ta, jnp.float32),
+                        jnp.asarray(tb, jnp.float32))
+        return (op(va * _decay_weight(ta, t, lam),
+                   vb * _decay_weight(tb, t, lam)), t)
+    return combine
+
+
+def _decay_identity(*, example=None):
+    if example is None:
+        return (jnp.zeros(()), jnp.full((), -jnp.inf))
+    v, t = example
+    return (jnp.zeros_like(v), jnp.full_like(jnp.asarray(t, jnp.float32),
+                                             -jnp.inf))
+
+
+def _decay_monoid(name: str, half_life: float, op, lift) -> Monoid:
+    if half_life <= 0:
+        raise ValueError(f"half_life must be positive, got {half_life}")
+    lam = math.log(2.0) / float(half_life)
+    return Monoid(
+        name=f"{name}(hl={half_life:g})",
+        combine=_decay_combine(lam, op),
+        identity_fn=_decay_identity,
+        lift=lift,
+        extract=lambda s: s[0],     # aggregate as-of the anchor time s[1]
+    )
+
+
+def _decay_lift(vt):
+    v, t = vt
+    return (jnp.asarray(v, jnp.float32), jnp.asarray(t, jnp.float32))
+
+
+def decayed_sum(half_life: float) -> Monoid:
+    """Exponentially-decayed sum: fold (value, time) events; the state is
+    the decayed total as of the newest event.  half_life in time units."""
+    return _decay_monoid("decayed_sum", half_life, jnp.add, _decay_lift)
+
+
+def decayed_count(half_life: float) -> Monoid:
+    """Decayed event count: :func:`decayed_sum` with lift (t) -> (1, t) —
+    a rate estimator (events per recent half-life window)."""
+    return _decay_monoid(
+        "decayed_count", half_life, jnp.add,
+        lambda t: (jnp.ones((), jnp.float32), jnp.asarray(t, jnp.float32)))
+
+
+def decayed_lru(half_life: float) -> Monoid:
+    """Decayed-LRU score: max over accesses of the decayed access weight —
+    the cache-eviction score (recency with smooth aging).  Access weights
+    must be non-negative (0 is the identity value)."""
+    return _decay_monoid(
+        "decayed_lru", half_life, jnp.maximum,
+        lambda vt: (jnp.maximum(jnp.asarray(vt[0], jnp.float32), 0.0),
+                    jnp.asarray(vt[1], jnp.float32)))
+
+
+def decayed_value(state, t, half_life: float) -> jnp.ndarray:
+    """Re-anchor a decay-monoid state to query time ``t`` (extract-at-t)."""
+    v, ts = state
+    lam = math.log(2.0) / float(half_life)
+    return v * _decay_weight(ts, t, lam)
+
+
+# ---------------------------------------------------------------------------
 # combinators
 # ---------------------------------------------------------------------------
 
@@ -589,3 +682,17 @@ register_monoid(count_min(2, 32), lambda: [
     count_min(2, 32).lift(jnp.asarray(x, jnp.int32)) for x in (3, 11, 42)])
 register_monoid(hyperloglog(4), lambda: [
     hyperloglog(4).lift(jnp.asarray(x, jnp.int32)) for x in (3, 11, 42)])
+
+# decay monoids (windowed streaming analytics): samples are post-lift
+# (value, anchor_time) states with DISTINCT finite times — including a
+# negative one, so a broken identity anchored at t=0 cannot slip through
+# the law suite (it only fails on values older than its anchor)
+register_monoid(decayed_sum(16.0), lambda: [
+    (_f32(s, ()), jnp.asarray(t, jnp.float32))
+    for s, t in ((0, -3.0), (1, 2.5), (2, 7.0))])
+register_monoid(decayed_count(16.0), lambda: [
+    (jnp.abs(_f32(s, ())) + 1.0, jnp.asarray(t, jnp.float32))
+    for s, t in ((3, -1.0), (4, 4.0), (5, 9.5))])
+register_monoid(decayed_lru(16.0), lambda: [
+    (jnp.abs(_f32(s, ())), jnp.asarray(t, jnp.float32))
+    for s, t in ((6, -2.0), (7, 3.0), (8, 8.0))])

@@ -2,3 +2,6 @@
 from .pipeline import DataConfig, Prefetcher, SyntheticCorpus, packed_stats
 from .stats import (init_stats, make_stream_stats, summarize, sync_stats,
                     update_stats)
+from .windows import (SlidingWindow, TumblingWindow, WindowedMetrics,
+                      WindowResult, session_fold, sessionize, tumbling_fold,
+                      tumbling_ids)

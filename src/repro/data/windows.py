@@ -1,0 +1,388 @@
+"""Windowed streaming analytics: sliding/tumbling monoid windows,
+sessionization, and live per-user serving metrics.
+
+The paper's principle extended from batch folds to *infinite streams*: a
+window aggregate is just a merge tree of partial monoid states, so the same
+``(combine, identity)`` pair that powers the batch planner powers every
+window shape here — no inverses required, which is what lets the
+non-invertible zoo (max, CMS, HLL, top-k, decayed-LRU) slide.
+
+Three window shapes, three execution strategies, one algebra:
+
+* :class:`SlidingWindow` — the **two-stacks / flip-when-empty** trick:
+  a FIFO window maintained as two stacks of partial aggregates.  Each event
+  costs O(1) amortized combines (one on push, one when its stack flips),
+  and eviction never needs ``combine``'s inverse — the evicted element was
+  never folded into the front stack's suffix aggregates in the first place.
+* :class:`TumblingWindow` / :func:`tumbling_fold` — fixed-width time
+  buckets.  The streaming class closes windows as event time advances; the
+  batch function lowers the whole stream through the execution planner
+  (:func:`repro.core.plan.execute_fold`) with **window id == segment id**,
+  so tumbling aggregation rides the same kernel/segment-ops/scan tiers and
+  mesh collectives as every other keyed fold.
+* :func:`sessionize` / :func:`session_fold` — per-user sessions split on
+  inactivity gaps, with **session id == segment id**: per-session combines
+  are one planner-lowered keyed fold, and per-host session tables merge
+  across the fleet with ``data.stats.sync_stats`` (sessions are disjoint
+  or monoid-mergeable, so the cross-host combine is exact).
+
+:class:`WindowedMetrics` is the serving consumer: subscribe it to a
+:class:`repro.runtime.engine.ContinuousEngine` and every stream event folds
+into per-user sliding windows (latency/TTFT/tokens via the mean-pair
+monoid), per-user decayed token-rate scores (``monoids.decayed_sum``), and
+a fleet-wide tumbling token counter — live analytics with O(window) state
+per user, any traffic volume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import monoids
+from ..core.monoid import Monoid, Pytree
+from ..core.plan import execute_fold
+
+
+# ---------------------------------------------------------------------------
+# sliding windows — the two-stacks trick
+# ---------------------------------------------------------------------------
+
+class SlidingWindow:
+    """Aggregate of the last ``size`` events, O(1) amortized combines/event.
+
+    Two stacks of partial monoid states:
+
+    * ``back`` — raw lifted values in arrival order, plus their running
+      aggregate (``push`` costs one combine);
+    * ``front`` — suffix aggregates built when an eviction finds the front
+      empty: the back stack is *flipped*, each popped value combined onto
+      an accumulator so entry ``i`` stores ``fold(v_i .. v_newest)`` in
+      stream order.  The flip costs one combine per element, and each
+      element flips at most once — O(1) amortized.
+
+    ``query() == combine(front_top, back_agg)`` preserves stream order, so
+    non-commutative monoids (``concat``, ``affine_scan``) are safe; and no
+    step ever *removes* a value from an aggregate, so non-invertible
+    monoids (max, CMS, HLL, decayed-LRU) are safe too — the property the
+    brute-force differential oracle in tests/test_windows.py pins.
+
+    ``example=`` seeds the identity for queries before the first push;
+    otherwise the identity is derived from the first pushed value.
+    """
+
+    def __init__(self, m: Monoid, size: int, *,
+                 example: Optional[Pytree] = None):
+        if size < 1:
+            raise ValueError(f"window size must be >= 1, got {size}")
+        self.monoid = m
+        self.size = int(size)
+        self._front: List[Pytree] = []    # suffix aggregates, top = oldest
+        self._back: List[Pytree] = []     # raw values, arrival order
+        self._back_agg: Optional[Pytree] = None
+        self._identity = None if example is None else m.identity_like(example)
+        self.pushes = 0
+        self.flip_combines = 0            # telemetry: amortization is visible
+
+    def __len__(self) -> int:
+        return len(self._front) + len(self._back)
+
+    def _e(self) -> Pytree:
+        if self._identity is None:
+            raise ValueError(
+                "query on an empty SlidingWindow with no identity: pass "
+                "example= at construction or push a value first")
+        return self._identity
+
+    def push(self, value: Pytree, *, lifted: bool = True) -> None:
+        """Fold one event in; evicts the oldest when the window is full."""
+        v = value if lifted else self.monoid.lift(value)
+        if self._identity is None:
+            self._identity = self.monoid.identity_like(v)
+        if len(self) == self.size:
+            self.evict()
+        self._back.append(v)
+        self._back_agg = (v if self._back_agg is None
+                          else self.monoid.combine(self._back_agg, v))
+        self.pushes += 1
+
+    def evict(self) -> None:
+        """Drop the oldest event (flip the back stack if front is empty)."""
+        if not self._front:
+            acc = self._e()
+            while self._back:
+                acc = self.monoid.combine(self._back.pop(), acc)
+                self._front.append(acc)
+                self.flip_combines += 1
+            self._back_agg = None
+        if not self._front:
+            raise ValueError("evict from an empty window")
+        self._front.pop()
+
+    def query(self) -> Pytree:
+        """The window aggregate (the identity when empty)."""
+        front = self._front[-1] if self._front else None
+        if front is None and self._back_agg is None:
+            return self._e()
+        if front is None:
+            return self._back_agg
+        if self._back_agg is None:
+            return front
+        return self.monoid.combine(front, self._back_agg)
+
+    def extract(self) -> Pytree:
+        return self.monoid.extract(self.query())
+
+
+# ---------------------------------------------------------------------------
+# tumbling windows — streaming and planner-lowered batch forms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WindowResult:
+    """One closed window: [start, end) and its folded monoid value."""
+
+    index: int
+    start: float
+    end: float
+    value: Pytree
+
+
+class TumblingWindow:
+    """Fixed-width time windows over a time-ordered stream.
+
+    ``push(value, t)`` folds the event into the open window and returns the
+    list of :class:`WindowResult` it closed (empty windows are skipped).
+    ``flush()`` closes and returns the open window, if any.
+    """
+
+    def __init__(self, m: Monoid, width: float, *, t0: float = 0.0,
+                 example: Optional[Pytree] = None):
+        if width <= 0:
+            raise ValueError(f"window width must be positive, got {width}")
+        self.monoid = m
+        self.width = float(width)
+        self.t0 = float(t0)
+        self._idx: Optional[int] = None   # open window index
+        self._state: Optional[Pytree] = None
+        self._identity = None if example is None else m.identity_like(example)
+        self.events = 0
+
+    def _window_of(self, t: float) -> int:
+        return int(math.floor((float(t) - self.t0) / self.width))
+
+    def _close(self) -> WindowResult:
+        res = WindowResult(index=self._idx,
+                           start=self.t0 + self._idx * self.width,
+                           end=self.t0 + (self._idx + 1) * self.width,
+                           value=self._state)
+        self._idx, self._state = None, None
+        return res
+
+    def push(self, value: Pytree, t: float, *,
+             lifted: bool = True) -> List[WindowResult]:
+        v = value if lifted else self.monoid.lift(value)
+        if self._identity is None:
+            self._identity = self.monoid.identity_like(v)
+        w = self._window_of(t)
+        closed: List[WindowResult] = []
+        if self._idx is not None and w < self._idx:
+            raise ValueError(
+                f"event at t={t} precedes the open window "
+                f"[{self.t0 + self._idx * self.width}, ...): tumbling "
+                "windows need a time-ordered stream")
+        if self._idx is not None and w > self._idx:
+            closed.append(self._close())
+        if self._idx is None:
+            self._idx, self._state = w, self.monoid.identity_like(v)
+        self._state = self.monoid.combine(self._state, v)
+        self.events += 1
+        return closed
+
+    def flush(self) -> List[WindowResult]:
+        """Close the open window (end-of-stream)."""
+        return [self._close()] if self._idx is not None else []
+
+
+def tumbling_ids(timestamps, *, width: float, t0: float = 0.0) -> jnp.ndarray:
+    """Window index per event — the segment ids of a tumbling fold."""
+    ts = jnp.asarray(timestamps, jnp.float32)
+    return jnp.floor((ts - t0) / width).astype(jnp.int32)
+
+
+def tumbling_fold(m: Monoid, values: Pytree, timestamps, *, width: float,
+                  num_windows: int, t0: float = 0.0, valid_mask=None,
+                  lifted: bool = True, **kwargs) -> Pytree:
+    """Batch tumbling-window aggregation through the execution planner.
+
+    Window id == segment id: the whole stream folds in ONE keyed fold on
+    whatever tier the planner picks, returning a ``(num_windows, ...)``
+    table.  Events outside ``[t0, t0 + num_windows*width)`` are masked to
+    the identity (the planner's ``valid_mask`` ragged path), composing with
+    any caller-provided mask.  Extra ``kwargs`` (``mesh_axes=``,
+    ``layout=``, ...) pass straight through to
+    :func:`repro.core.plan.execute_fold`.
+    """
+    ids = tumbling_ids(timestamps, width=width, t0=t0)
+    in_range = (ids >= 0) & (ids < num_windows)
+    mask = (in_range if valid_mask is None
+            else in_range & jnp.asarray(valid_mask, jnp.bool_))
+    ids = jnp.clip(ids, 0, num_windows - 1)
+    return execute_fold(m, values, segment_ids=ids,
+                        num_segments=num_windows, valid_mask=mask,
+                        lifted=lifted, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# sessionization — session id == segment id
+# ---------------------------------------------------------------------------
+
+def sessionize(user_ids, timestamps, *, gap: float) -> Tuple[np.ndarray, int]:
+    """Split a time-ordered per-user event stream into sessions.
+
+    A user's event starts a NEW session when it is their first event or
+    arrives more than ``gap`` after their previous one.  Returns
+    ``(session_ids, num_sessions)``: int32 ids dense in order of session
+    birth — directly usable as the ``segment_ids`` of a planner keyed fold
+    (:func:`session_fold`).  Host-side by construction: session assignment
+    is inherently serial per user, while everything downstream of the ids
+    is a data-parallel fold.
+    """
+    users = np.asarray(user_ids)
+    ts = np.asarray(timestamps, np.float64)
+    if users.ndim != 1 or users.shape != ts.shape:
+        raise ValueError(
+            f"user_ids and timestamps must be matching 1-D arrays, got "
+            f"{users.shape} vs {ts.shape}")
+    if ts.size > 1 and np.any(np.diff(ts) < 0):
+        raise ValueError("timestamps must be non-decreasing (time-ordered "
+                         "stream); sort events before sessionizing")
+    out = np.empty(users.shape, np.int32)
+    last_t: Dict[Any, float] = {}
+    current: Dict[Any, int] = {}
+    n = 0
+    for i, (u, t) in enumerate(zip(users.tolist(), ts.tolist())):
+        if u not in last_t or t - last_t[u] > gap:
+            current[u] = n
+            n += 1
+        last_t[u] = t
+        out[i] = current[u]
+    return out, n
+
+
+def session_fold(m: Monoid, values: Pytree, session_ids, num_sessions: int, *,
+                 valid_mask=None, lifted: bool = True, **kwargs) -> Pytree:
+    """Per-session aggregation: ONE planner-lowered keyed fold.
+
+    ``session_ids`` come from :func:`sessionize`; the result is a
+    ``(num_sessions, ...)`` table.  Cross-host, each host folds its local
+    shard then merges tables with ``data.stats.sync_stats`` — exact,
+    because a session table is itself a monoid value under the element-wise
+    combine.
+    """
+    return execute_fold(m, values,
+                        segment_ids=jnp.asarray(session_ids, jnp.int32),
+                        num_segments=num_sessions, valid_mask=valid_mask,
+                        lifted=lifted, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# the serving consumer — live per-user windows over engine stream events
+# ---------------------------------------------------------------------------
+
+class WindowedMetrics:
+    """Per-user serving metrics as monoid windows (an engine consumer).
+
+    Subscribe to a :class:`repro.runtime.engine.ContinuousEngine`::
+
+        metrics = WindowedMetrics(window=32, half_life_s=60.0)
+        engine = ContinuousEngine(backend, config,
+                                  consumers=[metrics.observe])
+
+    Per stream event:
+
+    * ``token`` events fold ``(1, t)`` into the user's **decayed token
+      rate** (``monoids.decayed_sum``) and into a fleet-wide
+      :class:`TumblingWindow` token counter;
+    * ``done`` events push ``(latency, ttft, tokens)`` into the user's
+      **sliding window** of the last ``window`` completed requests (the
+      mean-pair monoid — one two-stacks window carries all three means).
+
+    State is O(window) per user and O(1) for the fleet, independent of
+    traffic volume — the streaming half of the Summingbird property.
+    """
+
+    def __init__(self, *, window: int = 32, half_life_s: float = 60.0,
+                 tumble_s: float = 1.0):
+        self.window = int(window)
+        self.half_life_s = float(half_life_s)
+        self._rate_m = monoids.decayed_sum(half_life_s)
+        self._per_user: Dict[Any, SlidingWindow] = {}
+        self._rate: Dict[Any, Tuple] = {}
+        self._fleet = TumblingWindow(monoids.sum_, tumble_s,
+                                     example=jnp.zeros((), jnp.float32))
+        self.closed_fleet_windows: List[WindowResult] = []
+        self.events = 0
+
+    # -- the consumer entry point -------------------------------------------
+    def observe(self, event) -> None:
+        """Fold one engine ``StreamEvent`` in (duck-typed: ``kind``,
+        ``user``, ``time_s``, and ``result`` for done events)."""
+        self.events += 1
+        if event.kind == "token":
+            v = (jnp.ones((), jnp.float32),
+                 jnp.asarray(event.time_s, jnp.float32))
+            st = self._rate.get(event.user)
+            self._rate[event.user] = (v if st is None
+                                      else self._rate_m.combine(st, v))
+            self.closed_fleet_windows.extend(
+                self._fleet.push(jnp.ones((), jnp.float32), event.time_s))
+        elif event.kind == "done":
+            r = event.result
+            w = self._per_user.get(event.user)
+            if w is None:
+                w = self._per_user[event.user] = SlidingWindow(
+                    monoids.mean, self.window)
+            w.push((jnp.asarray([r.latency_s, r.ttft_s,
+                                 float(len(r.tokens))], jnp.float32),
+                    jnp.ones((), jnp.int32)))
+
+    # -- queries ------------------------------------------------------------
+    def users(self) -> List[Any]:
+        return sorted(set(self._per_user) | set(self._rate))
+
+    def user_window(self, user) -> Dict[str, float]:
+        """Windowed means over the user's last ``window`` requests."""
+        w = self._per_user.get(user)
+        if w is None or len(w) == 0:
+            return {"requests": 0, "latency_s": 0.0, "ttft_s": 0.0,
+                    "tokens": 0.0}
+        mean = np.asarray(w.extract())
+        return {"requests": len(w), "latency_s": float(mean[0]),
+                "ttft_s": float(mean[1]), "tokens": float(mean[2])}
+
+    def user_token_rate(self, user, now: float) -> float:
+        """Decayed token count for ``user`` re-anchored to ``now``."""
+        st = self._rate.get(user)
+        if st is None:
+            return 0.0
+        return float(monoids.decayed_value(st, now, self.half_life_s))
+
+    def fleet_tokens(self) -> float:
+        """Total tokens across closed fleet windows plus the open one."""
+        closed = sum(float(np.asarray(r.value))
+                     for r in self.closed_fleet_windows)
+        open_ = sum(float(np.asarray(r.value)) for r in self._fleet.flush())
+        return closed + open_
+
+    def summary(self, now: float) -> Dict[Any, Dict[str, float]]:
+        """Per-user snapshot: windowed means + decayed token rate."""
+        out = {}
+        for u in self.users():
+            row = self.user_window(u)
+            row["token_rate"] = self.user_token_rate(u, now)
+            out[u] = row
+        return out

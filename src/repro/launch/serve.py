@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ShapeCell, context_spec, get_config
+from ..data.windows import WindowedMetrics
 from ..dist import sharding as shd
 from ..models import (RunCtx, decode_step, init_cache, init_params,
                       param_axes, param_shapes)
@@ -195,15 +196,16 @@ def run_batched_decode(engine: ContinuousEngine, batch: DecodeBatch, *,
 
 def poisson_trace(rng: np.random.Generator, n: int, rate_hz: float,
                   min_prompt: int, max_prompt: int, vocab: int,
-                  max_new: int):
-    """[(arrival_offset_s, prompt, max_new)] — synthetic open-loop traffic."""
+                  max_new: int, users: int = 1):
+    """[(arrival_offset_s, prompt, max_new, user)] — synthetic open-loop
+    traffic; requests attribute uniformly to ``users`` synthetic users."""
     t = 0.0
     out = []
     for _ in range(n):
         t += float(rng.exponential(1.0 / rate_hz)) if rate_hz > 0 else 0.0
         plen = int(rng.integers(min_prompt, max_prompt + 1))
         prompt = rng.integers(1, vocab, plen).tolist()
-        out.append((t, prompt, max_new))
+        out.append((t, prompt, max_new, int(rng.integers(0, users))))
     return out
 
 
@@ -221,8 +223,9 @@ def serve_trace(engine: ContinuousEngine, trace, *,
     while i < len(trace) or engine.pending or engine.num_active:
         now = clock() - t0
         while i < len(trace) and trace[i][0] <= now:
-            _, prompt, max_new = trace[i]
-            uids.append(engine.submit(prompt, max_new_tokens=max_new))
+            _, prompt, max_new, *rest = trace[i]
+            uids.append(engine.submit(prompt, max_new_tokens=max_new,
+                                      user=rest[0] if rest else 0))
             i += 1
         if engine.pending or engine.num_active:
             for ev in engine.step():
@@ -254,6 +257,8 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--users", type=int, default=4,
+                    help="synthetic user population for per-user windows")
     args = ap.parse_args(argv)
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
@@ -265,6 +270,8 @@ def main(argv=None):
                          temperature=args.temperature, seed=args.seed,
                          model_parallel=args.model_parallel, full=args.full)
     engine = build_engine(config)
+    metrics = WindowedMetrics(window=32, half_life_s=60.0)
+    engine.subscribe(metrics.observe)
 
     plan = decode_metrics_plan(config.num_slots, config.num_slots)
     print(f"arch={args.arch} slots={config.num_slots} buckets={buckets} "
@@ -274,7 +281,8 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     vocab = engine.backend.vocab_size
     trace = poisson_trace(rng, args.requests, args.rate, args.min_prompt,
-                          args.max_prompt, vocab, args.gen)
+                          args.max_prompt, vocab, args.gen,
+                          users=max(1, args.users))
     results, wall = serve_trace(engine, trace, quiet=False)
 
     ttfts = np.array([r.ttft_s for r in results])
@@ -287,6 +295,16 @@ def main(argv=None):
           f"p99={np.percentile(ttfts, 99) * 1e3:.1f}ms")
     print(f"compiled shapes: {engine.compile_counts()} "
           f"(bound: 2 + {len(buckets)} buckets)")
+    now = time.perf_counter()
+    print(f"per-user windows (last {metrics.window} requests, token-rate "
+          f"half-life {metrics.half_life_s:g}s; fleet tokens "
+          f"{metrics.fleet_tokens():.0f}):")
+    for user, row in metrics.summary(now).items():
+        print(f"  user={user} requests={row['requests']} "
+              f"latency={row['latency_s'] * 1e3:.1f}ms "
+              f"ttft={row['ttft_s'] * 1e3:.1f}ms "
+              f"tokens/req={row['tokens']:.1f} "
+              f"token_rate={row['token_rate']:.1f}")
     return 0
 
 

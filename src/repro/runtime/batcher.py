@@ -38,6 +38,7 @@ class Request:
     prompt: Tuple[int, ...]
     max_new_tokens: int = 16
     arrival_s: float = 0.0
+    user: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,12 +136,13 @@ class RequestBatcher:
     def __len__(self) -> int:
         return len(self._pending)
 
-    def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16) -> int:
+    def submit(self, prompt: Sequence[int], *, max_new_tokens: int = 16,
+               user: int = 0) -> int:
         """Enqueue one request; returns its uid."""
         uid = next(self._uids)
         self._pending.append(Request(uid=uid, prompt=tuple(int(t) for t in prompt),
                                      max_new_tokens=max_new_tokens,
-                                     arrival_s=self._clock()))
+                                     arrival_s=self._clock(), user=user))
         self.stats.enqueued += 1
         return uid
 

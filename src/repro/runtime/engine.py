@@ -202,6 +202,7 @@ class RequestResult:
     slot: int
     prompt_len: int
     bucket: int
+    user: int
     tokens: List[int]
     logprob_sum: float
     stopped: bool                 # hit eos (vs exhausted max_new_tokens)
@@ -223,6 +224,7 @@ class StreamEvent:
     slot: int
     step: int                     # engine step counter at emission
     time_s: float
+    user: int = 0
     token: Optional[int] = None
     index: Optional[int] = None   # position in the generated sequence
     ttft_s: Optional[float] = None
@@ -278,6 +280,7 @@ class EngineStats:
 @dataclasses.dataclass
 class _SlotState:
     uid: int
+    user: int
     seed: int
     prompt_len: int
     bucket: int
@@ -308,10 +311,15 @@ class ContinuousEngine:
     """
 
     def __init__(self, backend: EngineBackend, config: ServeConfig, *,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 consumers: Sequence[Callable[[StreamEvent], None]] = ()):
         self.backend = backend
         self.config = config
         self._clock = clock
+        # stream-event consumers (e.g. data.windows.WindowedMetrics.observe):
+        # every event a step produces — admissions, tokens, retirements —
+        # is dispatched to each consumer at the end of that step()
+        self._consumers: List[Callable[[StreamEvent], None]] = list(consumers)
         # the batcher's FIFO is the admission queue: arrival order in,
         # arrival order into freed slots (take(), not flush()).
         self.queue = RequestBatcher(max_batch_size=config.num_slots,
@@ -429,9 +437,14 @@ class ContinuousEngine:
     def active_uids(self) -> List[int]:
         return [s.uid for s in self._slots if s is not None]
 
+    def subscribe(self, consumer: Callable[[StreamEvent], None]) -> None:
+        """Add a stream-event consumer (called once per event, in event
+        order, at the end of each :meth:`step`)."""
+        self._consumers.append(consumer)
+
     def submit(self, prompt: Sequence[int], *,
                max_new_tokens: Optional[int] = None,
-               seed: Optional[int] = None) -> int:
+               seed: Optional[int] = None, user: int = 0) -> int:
         """Enqueue a request; returns its uid.  Admission happens on the
         next :meth:`step` as soon as a slot is free."""
         cfg = self.config
@@ -445,7 +458,8 @@ class ContinuousEngine:
             raise ValueError(
                 f"max_new_tokens must be in [1, {cfg.max_new_tokens}], "
                 f"got {max_new}")
-        uid = self.queue.submit(prompt, max_new_tokens=max_new)
+        uid = self.queue.submit(prompt, max_new_tokens=max_new,
+                                user=int(user))
         self._seeds[uid] = uid if seed is None else int(seed)
         self.stats.submitted += 1
         return uid
@@ -476,8 +490,9 @@ class ContinuousEngine:
         first = int(jax.device_get(first))
         now = self._clock()
         ttft = now - req.arrival_s
-        st = _SlotState(uid=req.uid, seed=seed, prompt_len=plen,
-                        bucket=bucket, max_new=req.max_new_tokens,
+        st = _SlotState(uid=req.uid, user=req.user, seed=seed,
+                        prompt_len=plen, bucket=bucket,
+                        max_new=req.max_new_tokens,
                         arrival_s=req.arrival_s, ttft_s=ttft,
                         tokens=[first], cur=first)
         self._slots[slot] = st
@@ -488,7 +503,8 @@ class ContinuousEngine:
         self._used_before[slot] = True
         events.append(StreamEvent(uid=st.uid, kind="token", slot=slot,
                                   step=self._step_count, time_s=now,
-                                  token=first, index=0, ttft_s=ttft))
+                                  user=st.user, token=first, index=0,
+                                  ttft_s=ttft))
         if first == cfg.eos_id or st.max_new <= 1:
             self._retire([slot], events, now)
 
@@ -499,7 +515,7 @@ class ContinuousEngine:
             st = self._slots[slot]
             res = RequestResult(
                 uid=st.uid, slot=slot, prompt_len=st.prompt_len,
-                bucket=st.bucket, tokens=list(st.tokens),
+                bucket=st.bucket, user=st.user, tokens=list(st.tokens),
                 logprob_sum=float(table[slot, 0]),
                 stopped=bool(table[slot, 2] > 0),
                 stop_step=self._step_count,
@@ -509,7 +525,7 @@ class ContinuousEngine:
             self.stats.completed += 1
             events.append(StreamEvent(uid=st.uid, kind="done", slot=slot,
                                       step=self._step_count, time_s=now,
-                                      result=res))
+                                      user=st.user, result=res))
 
     # -- the rolling decode step --------------------------------------------
 
@@ -521,7 +537,7 @@ class ContinuousEngine:
         S = self.config.num_slots
         occupied = [i for i, s in enumerate(self._slots) if s is not None]
         if not occupied:
-            return events
+            return self._dispatch(events)
 
         cur = np.zeros((S, 1), np.int32)
         active = np.zeros((S,), bool)
@@ -552,11 +568,17 @@ class ContinuousEngine:
             self.stats.generated_tokens += 1
             events.append(StreamEvent(uid=st.uid, kind="token", slot=i,
                                       step=self._step_count, time_s=now,
-                                      token=tok, index=index))
+                                      user=st.user, token=tok, index=index))
             if tok == self.config.eos_id or st.n_gen >= st.max_new:
                 retired.append(i)
         if retired:
             self._retire(retired, events, now)
+        return self._dispatch(events)
+
+    def _dispatch(self, events: List[StreamEvent]) -> List[StreamEvent]:
+        for ev in events:
+            for consumer in self._consumers:
+                consumer(ev)
         return events
 
     def run(self, *, max_steps: Optional[int] = None) -> Iterator[StreamEvent]:

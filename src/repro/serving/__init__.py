@@ -19,6 +19,7 @@ module is the import surface applications should depend on —
 ``build_engine`` wires the real model substrate, and the engine classes,
 the request/stream types, and the admission-queue types are all here.
 """
+from ..data.windows import WindowedMetrics
 from ..launch.serve import build_engine, build_serve_step, run_batched_decode
 from ..runtime.batcher import BatcherStats, DecodeBatch, Request, RequestBatcher
 from ..runtime.engine import (ContinuousEngine, EngineBackend, EngineStats,
@@ -30,7 +31,8 @@ from ..runtime.engine import (ContinuousEngine, EngineBackend, EngineStats,
 __all__ = [
     "BatcherStats", "ContinuousEngine", "DecodeBatch", "EngineBackend",
     "EngineStats", "METRIC_COLS", "Request", "RequestBatcher",
-    "RequestResult", "ServeConfig", "StreamEvent", "build_engine",
-    "build_serve_step", "decode_metrics_init", "decode_metrics_plan",
-    "decode_metrics_step", "extract_metrics", "run_batched_decode",
+    "RequestResult", "ServeConfig", "StreamEvent", "WindowedMetrics",
+    "build_engine", "build_serve_step", "decode_metrics_init",
+    "decode_metrics_plan", "decode_metrics_step", "extract_metrics",
+    "run_batched_decode",
 ]

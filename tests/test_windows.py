@@ -1,0 +1,506 @@
+"""Windowed streaming analytics: differential oracles and stateful tests.
+
+* Two-stacks :class:`SlidingWindow` vs a brute-force O(n*w) recompute over
+  the monoid zoo (sum/max/mean-pair/CMS/HLL + a non-commutative matrix
+  monoid), unkeyed and keyed (per-user), hypothesis-driven with
+  deterministic fallbacks.
+* Decay monoids: registered law samples, exact half-life semantics, and a
+  RED test proving a decay monoid with a broken identity fails the law
+  suite.
+* Sessionization vs a pure-Python reference: boundaries and per-session
+  folds bit-for-bit (int32), including the cross-host ``sync_stats`` merge
+  under 8 fake devices.
+* :class:`WindowedMetrics` fed by the toy continuous engine end to end.
+"""
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+from repro.core import monoids
+from repro.core.monoid import Monoid, check_laws
+from repro.data.windows import (SlidingWindow, TumblingWindow,
+                                WindowedMetrics, session_fold, sessionize,
+                                tumbling_fold, tumbling_ids)
+from test_distributed import PRELUDE, run_distributed
+from test_serving import toy_backend, toy_engine
+
+# ---------------------------------------------------------------------------
+# the zoo: monoid factory + raw-item generator, per name
+# ---------------------------------------------------------------------------
+
+# 2x2 matrix product: non-commutative, so any window implementation that
+# reorders combines (or folds the evicted element back in) fails loudly
+_MAT2 = Monoid(
+    name="mat2", combine=lambda a, b: a @ b,
+    identity_fn=lambda *, example=None: jnp.eye(2, dtype=jnp.float32),
+    commutative=False)
+
+
+def _floats(rng, n):
+    return [jnp.asarray(v, jnp.float32)
+            for v in rng.integers(-8, 8, n).tolist()]
+
+
+def _ints(rng, n):
+    return [jnp.asarray(v, jnp.int32)
+            for v in rng.integers(0, 100, n).tolist()]
+
+
+def _mats(rng, n):
+    # unimodular-ish integer matrices keep products exact in float32
+    return [jnp.asarray([[1.0, float(a)], [0.0, 1.0]]) if i % 2 == 0
+            else jnp.asarray([[1.0, 0.0], [float(a), 1.0]])
+            for i, a in enumerate(rng.integers(-3, 4, n).tolist())]
+
+
+ZOO = {
+    "sum": (lambda: monoids.sum_, _floats),
+    "max": (lambda: monoids.max_, _floats),
+    "mean": (lambda: monoids.mean, _floats),
+    "cms": (lambda: monoids.count_min(2, 64), _ints),
+    "hll": (lambda: monoids.hyperloglog(4), _ints),
+    "mat2": (lambda: _MAT2, _mats),
+}
+
+
+def brute_window(m, lifted, i, size):
+    """Oracle: fold the last ``size`` lifted items ending at ``i``, in
+    stream order, from the identity — O(w) combines per query."""
+    acc = m.identity_like(lifted[0])
+    for it in lifted[max(0, i - size + 1): i + 1]:
+        acc = m.combine(acc, it)
+    return acc
+
+
+def assert_window_matches_bruteforce(m, items, size):
+    lifted = [m.lift(x) for x in items]
+    w = SlidingWindow(m, size)
+    for i, it in enumerate(lifted):
+        w.push(it)
+        want = brute_window(m, lifted, i, size)
+        assert m.equal(w.query(), want, rtol=1e-5, atol=1e-5), \
+            (m.name, size, i)
+    # each element flips at most once: O(1) amortized combines per event
+    assert w.flip_combines <= w.pushes
+
+
+# ---------------------------------------------------------------------------
+# sliding window == brute force (deterministic sweep, always runs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_sliding_window_matches_bruteforce(name):
+    make, gen = ZOO[name]
+    rng = np.random.default_rng(hash(name) % 2**31)
+    for size in (1, 3, 7):
+        assert_window_matches_bruteforce(make(), gen(rng, 19), size)
+
+
+@pytest.mark.parametrize("name", ["sum", "max", "cms"])
+def test_keyed_sliding_windows_match_bruteforce(name):
+    """Per-user windows: one SlidingWindow per key, each == its own oracle
+    over only that user's events."""
+    make, gen = ZOO[name]
+    m = make()
+    rng = np.random.default_rng(3)
+    users = rng.integers(0, 3, 40).tolist()
+    items = [m.lift(x) for x in gen(rng, 40)]
+    wins, per_user = {}, {}
+    for u, it in zip(users, items):
+        w = wins.setdefault(u, SlidingWindow(m, 4))
+        seen = per_user.setdefault(u, [])
+        seen.append(it)
+        w.push(it)
+        want = brute_window(m, seen, len(seen) - 1, 4)
+        assert m.equal(w.query(), want, rtol=1e-5, atol=1e-5), (name, u)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_sliding_window_matches_bruteforce_hypothesis(data):
+    """Arbitrary streams and window sizes over the whole zoo."""
+    name = data.draw(st.sampled_from(sorted(ZOO)))
+    make, _ = ZOO[name]
+    m = make()
+    size = data.draw(st.integers(min_value=1, max_value=8))
+    if name in ("cms", "hll"):
+        raw = data.draw(st.lists(st.integers(0, 200), min_size=1,
+                                 max_size=20))
+        items = [jnp.asarray(v, jnp.int32) for v in raw]
+    elif name == "mat2":
+        raw = data.draw(st.lists(st.integers(-3, 3), min_size=1,
+                                 max_size=16))
+        items = [jnp.asarray([[1.0, float(v)], [0.0, 1.0]]) if i % 2
+                 else jnp.asarray([[1.0, 0.0], [float(v), 1.0]])
+                 for i, v in enumerate(raw)]
+    else:
+        raw = data.draw(st.lists(st.integers(-8, 8), min_size=1,
+                                 max_size=20))
+        items = [jnp.asarray(v, jnp.float32) for v in raw]
+    assert_window_matches_bruteforce(m, items, size)
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_keyed_sliding_windows_hypothesis(data):
+    m = monoids.sum_
+    events = data.draw(st.lists(
+        st.tuples(st.integers(0, 3), st.integers(-8, 8)),
+        min_size=1, max_size=30))
+    size = data.draw(st.integers(min_value=1, max_value=5))
+    wins, per_user = {}, {}
+    for u, v in events:
+        it = jnp.asarray(v, jnp.float32)
+        w = wins.setdefault(u, SlidingWindow(m, size))
+        seen = per_user.setdefault(u, [])
+        seen.append(it)
+        w.push(it)
+        want = brute_window(m, seen, len(seen) - 1, size)
+        assert m.equal(w.query(), want, rtol=1e-5, atol=1e-5)
+
+
+def test_sliding_window_basics():
+    w = SlidingWindow(monoids.sum_, 3,
+                      example=jnp.zeros((), jnp.float32))
+    assert float(np.asarray(w.query())) == 0.0      # identity when empty
+    for v in (1, 2, 3, 4):
+        w.push(jnp.asarray(float(v)))
+    assert len(w) == 3
+    assert float(np.asarray(w.extract())) == 2 + 3 + 4
+    with pytest.raises(ValueError):
+        SlidingWindow(monoids.sum_, 0)
+    with pytest.raises(ValueError):
+        SlidingWindow(monoids.sum_, 2).query()      # no identity yet
+
+
+# ---------------------------------------------------------------------------
+# hypothesis stateful machine: window vs a deque reference
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    from collections import deque
+
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+
+    class WindowMachine(RuleBasedStateMachine):
+        """Random push/evict/query interleavings vs a deque of raw values."""
+
+        @initialize(size=st.integers(1, 6))
+        def setup(self, size):
+            self.size = size
+            self.win = SlidingWindow(monoids.sum_, size,
+                                     example=jnp.zeros((), jnp.float32))
+            self.ref = deque(maxlen=size)
+
+        @rule(v=st.integers(-10, 10))
+        def push(self, v):
+            self.win.push(jnp.asarray(v, jnp.float32))
+            self.ref.append(v)
+
+        @rule()
+        def evict(self):
+            if self.ref:
+                self.win.evict()
+                self.ref.popleft()
+
+        @invariant()
+        def window_matches_reference(self):
+            if hasattr(self, "ref"):
+                assert len(self.win) == len(self.ref)
+                assert float(np.asarray(self.win.query())) == sum(self.ref)
+
+    WindowMachine.TestCase.settings = settings(max_examples=10,
+                                               stateful_step_count=20,
+                                               deadline=None)
+    TestWindowMachine = WindowMachine.TestCase
+
+
+# ---------------------------------------------------------------------------
+# decay monoids
+# ---------------------------------------------------------------------------
+
+DECAY_NAMES = ("decayed_sum(hl=16)", "decayed_count(hl=16)",
+               "decayed_lru(hl=16)")
+
+
+def test_decay_monoids_registered_with_law_samples():
+    assert monoids.missing_law_samples() == []
+    for name in DECAY_NAMES:
+        assert name in monoids.REGISTRY, name
+        check_laws(monoids.REGISTRY[name], monoids.law_samples_for(name)())
+
+
+def test_decay_semantics_half_life():
+    m = monoids.decayed_sum(16.0)
+    s = m.combine(m.lift((1.0, 0.0)), m.lift((1.0, 16.0)))
+    # the t=0 unit halved once, the t=16 unit fresh
+    assert np.isclose(float(monoids.decayed_value(s, 16.0, 16.0)), 1.5)
+    # re-anchoring the query another half-life halves the whole thing
+    assert np.isclose(float(monoids.decayed_value(s, 32.0, 16.0)), 0.75)
+    lru = monoids.decayed_lru(16.0)
+    s = lru.combine(lru.lift((4.0, 0.0)), lru.lift((1.0, 16.0)))
+    # max(4 halved, 1 fresh) = 2: older-but-larger still wins
+    assert np.isclose(float(monoids.decayed_value(s, 16.0, 16.0)), 2.0)
+
+
+def test_decay_fold_is_order_insensitive():
+    m = monoids.decayed_sum(8.0)
+    events = [(1.0, 3.0), (2.0, -1.0), (0.5, 10.0), (4.0, 7.0)]
+
+    def fold(order):
+        acc = m.identity_like(m.lift(events[0]))
+        for i in order:
+            acc = m.combine(acc, m.lift(events[i]))
+        return float(monoids.decayed_value(acc, 10.0, 8.0))
+
+    want = fold(range(len(events)))
+    for order in ([3, 1, 0, 2], [2, 0, 3, 1]):
+        assert np.isclose(fold(order), want, rtol=1e-5)
+
+
+def test_broken_decay_identity_is_rejected():
+    """RED: an identity anchored at t=0 (instead of -inf) decays pre-epoch
+    samples on combine with the unit — the law suite must catch it."""
+    samples = [(jnp.asarray(v, jnp.float32), jnp.asarray(t, jnp.float32))
+               for v, t in ((1.0, -5.0), (2.0, -2.0), (0.5, -9.0))]
+    check_laws(monoids.decayed_sum(8.0), samples)   # the real one is lawful
+    broken = dataclasses.replace(
+        monoids.decayed_sum(8.0), name="broken_decay",
+        identity_fn=lambda *, example=None: (jnp.zeros(()), jnp.zeros(())))
+    with pytest.raises(AssertionError, match="identity"):
+        check_laws(broken, samples)
+    with pytest.raises(ValueError):
+        monoids.decayed_sum(0.0)                    # non-positive half-life
+
+
+# ---------------------------------------------------------------------------
+# tumbling windows
+# ---------------------------------------------------------------------------
+
+def test_tumbling_stream_matches_batch_fold():
+    rng = np.random.default_rng(5)
+    n = 60
+    ts = np.sort(rng.uniform(0.0, 12.0, n)).astype(np.float32)
+    vals = rng.integers(-10, 10, n).astype(np.float32)
+    tw = TumblingWindow(monoids.sum_, 2.0)
+    closed = []
+    for v, t in zip(vals, ts):
+        closed += tw.push(jnp.asarray(v), float(t))
+    closed += tw.flush()
+
+    ref = {}
+    for v, t in zip(vals, ts):
+        ref[int(t // 2.0)] = ref.get(int(t // 2.0), 0.0) + float(v)
+    assert {r.index: float(np.asarray(r.value)) for r in closed} == ref
+    for r in closed:
+        assert r.end - r.start == 2.0
+
+    table = np.asarray(tumbling_fold(monoids.sum_, jnp.asarray(vals), ts,
+                                     width=2.0, num_windows=6))
+    np.testing.assert_allclose(table,
+                               [ref.get(i, 0.0) for i in range(6)])
+
+
+def test_tumbling_fold_masks_out_of_range_events():
+    vals = jnp.asarray([1.0, 10.0, 100.0, 1000.0])
+    ts = np.array([-0.5, 0.5, 1.5, 99.0])      # first and last out of range
+    table = np.asarray(tumbling_fold(monoids.sum_, vals, ts, width=1.0,
+                                     num_windows=2))
+    np.testing.assert_allclose(table, [10.0, 100.0])
+    ids = np.asarray(tumbling_ids(ts, width=1.0))
+    assert ids.tolist() == [-1, 0, 1, 99]
+
+
+def test_tumbling_rejects_time_travel():
+    tw = TumblingWindow(monoids.sum_, 1.0)
+    tw.push(jnp.asarray(1.0), 5.0)
+    with pytest.raises(ValueError):
+        tw.push(jnp.asarray(1.0), 3.0)
+    with pytest.raises(ValueError):
+        TumblingWindow(monoids.sum_, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# sessionization
+# ---------------------------------------------------------------------------
+
+def reference_sessionize(users, ts, gap):
+    """Independent pure-Python reference: dense ids in order of session
+    birth, new session on first-sight or gap expiry."""
+    sids, state, nxt = [], {}, 0
+    for u, t in zip(users, ts):
+        prev = state.get(u)
+        if prev is None or t - prev[1] > gap:
+            state[u] = [nxt, t]
+            nxt += 1
+        else:
+            state[u][1] = t
+        sids.append(state[u][0])
+    return sids, nxt
+
+
+def _session_case(seed, n=64, users=4):
+    rng = np.random.default_rng(seed)
+    us = rng.integers(0, users, n)
+    ts = np.cumsum(rng.uniform(0.0, 3.0, n))
+    vals = rng.integers(-50, 50, n).astype(np.int32)
+    return us, ts, vals
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sessionize_matches_reference(seed):
+    us, ts, _ = _session_case(seed)
+    sids, n = sessionize(us, ts, gap=4.0)
+    want, wn = reference_sessionize(us.tolist(), ts.tolist(), 4.0)
+    assert sids.tolist() == want
+    assert n == wn
+
+
+def test_sessionize_gap_boundary_and_validation():
+    # exactly-gap spacing stays in session; strictly-greater splits
+    sids, n = sessionize([7, 7, 7], [0.0, 2.0, 4.0 + 1e-9], gap=2.0)
+    assert sids.tolist() == [0, 0, 1] and n == 2
+    with pytest.raises(ValueError):
+        sessionize([1, 1], [2.0, 1.0], gap=1.0)     # unordered stream
+    with pytest.raises(ValueError):
+        sessionize([[1]], [1.0], gap=1.0)           # not 1-D
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_session_fold_bit_for_bit(seed):
+    """Per-session int32 sums through the planner == Python ints exactly."""
+    us, ts, vals = _session_case(seed)
+    sids, n = sessionize(us, ts, gap=4.0)
+    table = np.asarray(session_fold(monoids.sum_, jnp.asarray(vals), sids, n))
+    ref = [0] * n
+    for s, v in zip(sids.tolist(), vals.tolist()):
+        ref[s] += int(v)
+    assert table.tolist() == ref                    # bit-for-bit, no allclose
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_sessionize_matches_reference_hypothesis(data):
+    events = data.draw(st.lists(
+        st.tuples(st.integers(0, 3),
+                  st.floats(0.0, 5.0, allow_nan=False)),
+        min_size=1, max_size=40))
+    gap = data.draw(st.floats(0.5, 6.0, allow_nan=False))
+    users = [u for u, _ in events]
+    ts = np.cumsum([dt for _, dt in events])
+    sids, n = sessionize(users, ts, gap=gap)
+    want, wn = reference_sessionize(users, ts.tolist(), gap)
+    assert sids.tolist() == want and n == wn
+    assert sorted(set(sids.tolist())) == list(range(n))     # dense ids
+
+
+def test_session_fold_syncs_across_hosts():
+    """8 fake hosts each fold their shard of the session table, then ONE
+    sync_stats merge == the global pure-Python per-session sums exactly."""
+    run_distributed(PRELUDE + """
+from repro.core import monoids
+from repro.data.stats import sync_stats
+from repro.data.windows import session_fold, sessionize
+rng = np.random.default_rng(7)
+n = 128
+users = rng.integers(0, 6, n)
+ts = np.cumsum(rng.uniform(0.0, 3.0, n))
+vals = rng.integers(-20, 20, n).astype(np.int32)
+sids, nsess = sessionize(users, ts, gap=4.0)
+ref = [0] * nsess
+for s, v in zip(sids.tolist(), vals.tolist()):
+    ref[s] += int(v)
+P = jax.sharding.PartitionSpec
+
+def body(v, s):
+    local = session_fold(monoids.sum_, v, s, nsess)
+    return sync_stats(monoids.sum_, local, ("data",))
+
+out = jax.shard_map(body, mesh=mesh, in_specs=(P("data"), P("data")),
+                    out_specs=P(), check_vma=False)(
+    jnp.asarray(vals), jnp.asarray(sids, jnp.int32))
+assert np.asarray(out).tolist() == ref, (np.asarray(out), ref)
+print("ok")
+""")
+
+
+# ---------------------------------------------------------------------------
+# WindowedMetrics: unit semantics + the toy engine end to end
+# ---------------------------------------------------------------------------
+
+def _event(kind, user, t, result=None):
+    from repro.runtime.engine import StreamEvent
+    return StreamEvent(uid=0, kind=kind, slot=0, step=0, time_s=t,
+                       user=user, result=result)
+
+
+def _done(user, t, latency, ttft, ntok):
+    from repro.runtime.engine import RequestResult
+    res = RequestResult(uid=0, slot=0, prompt_len=1, bucket=4, user=user,
+                        tokens=list(range(ntok)), logprob_sum=0.0,
+                        stopped=True, stop_step=1, ttft_s=ttft,
+                        latency_s=latency)
+    return _event("done", user, t, result=res)
+
+
+def test_windowed_metrics_semantics():
+    m = WindowedMetrics(window=2, half_life_s=60.0, tumble_s=1.0)
+    m.observe(_event("token", user=1, t=0.0))
+    m.observe(_event("token", user=1, t=60.0))
+    assert np.isclose(m.user_token_rate(1, 60.0), 1.5)      # one half-life
+    assert m.user_token_rate(2, 60.0) == 0.0
+    m.observe(_done(1, 1.0, latency=0.4, ttft=0.1, ntok=3))
+    m.observe(_done(1, 2.0, latency=0.2, ttft=0.3, ntok=5))
+    m.observe(_done(1, 3.0, latency=0.6, ttft=0.5, ntok=7))
+    row = m.user_window(1)                # window=2: only the last two
+    assert row["requests"] == 2
+    assert np.isclose(row["latency_s"], 0.4)
+    assert np.isclose(row["ttft_s"], 0.4)
+    assert np.isclose(row["tokens"], 6.0)
+    assert m.fleet_tokens() == 2.0        # one per token event
+    summary = m.summary(now=60.0)
+    assert set(summary) == {1}
+    assert np.isclose(summary[1]["token_rate"], 1.5)
+
+
+def test_windowed_metrics_consumes_engine_events():
+    """End to end: every engine stream event folds into the consumer —
+    fleet tumbling count == generated tokens, users partition requests."""
+    metrics = WindowedMetrics(window=4, half_life_s=60.0, tumble_s=0.5)
+    eng = toy_engine(num_slots=2)
+    eng.subscribe(metrics.observe)
+    uids = {i: eng.submit([1 + i, 2, 3], user=i % 2) for i in range(5)}
+    list(eng.run(max_steps=200))
+    total_tokens = sum(len(eng.result(u).tokens) for u in uids.values())
+    assert metrics.fleet_tokens() == total_tokens
+    assert metrics.events == total_tokens + len(uids)       # + done events
+    assert metrics.users() == [0, 1]
+    summary = metrics.summary(now=time.perf_counter())
+    assert summary[0]["requests"] == 3 and summary[1]["requests"] == 2
+    for u in (0, 1):
+        assert summary[u]["token_rate"] > 0
+        assert summary[u]["latency_s"] >= summary[u]["ttft_s"] >= 0
+    want_mean = np.mean([len(eng.result(uids[i]).tokens)
+                         for i in range(5) if i % 2 == 0])
+    assert np.isclose(summary[0]["tokens"], want_mean)
+
+
+def test_engine_consumers_constructor_path():
+    from repro.serving import ServeConfig
+    from repro.runtime.engine import ContinuousEngine
+    seen = []
+    eng = ContinuousEngine(
+        toy_backend(),
+        ServeConfig(num_slots=2, prefill_buckets=(4, 8), max_new_tokens=3,
+                    eos_id=-7),
+        consumers=[seen.append])
+    eng.submit([1, 2], user=9)
+    list(eng.run(max_steps=50))
+    assert seen and all(ev.user == 9 for ev in seen)
+    kinds = [ev.kind for ev in seen]
+    assert kinds.count("done") == 1 and kinds.count("token") == 3
