@@ -1,0 +1,108 @@
+"""Prefix KV-cache serving path: warm-vs-cold TTFT under shared-prefix load.
+
+The prefix-tier rows CI guards (``prefix_`` in ``run.py --compare``; the
+rate/bytes rows are HIGHER-is-better, inverted by the gate):
+
+* ``prefix_ttft_p50/cold``  — TTFT p50 over a shared-prefix Poisson trace
+  with the radix prefix cache DISABLED (every admission prefills the full
+  prompt at its bucket).
+* ``prefix_ttft_p50/warm``  — the same trace, prefix cache on: admissions
+  scatter the cached prefix KV rows and prefill only the suffix, bucketed
+  on SUFFIX length.  The intra-run gate (``run.py check_prefix_rows``)
+  requires warm <= 0.6x cold at >= 50% shared traffic.
+* ``prefix_hit_rate``       — percent of prompt tokens served from the trie
+  over the measured pass.
+* ``prefix_bytes_saved``    — KV bytes not re-prefilled over the measured
+  pass (the fold-accounted savings).
+
+Both engines replay the IDENTICAL trace; a full warmup pass first compiles
+every (k, bucket) shape ladder program on each engine (and populates the
+warm engine's trie), so the measured pass is steady-state serving.
+"""
+import numpy as np
+
+from repro.launch.serve import build_engine, serve_trace
+from repro.runtime.engine import ServeConfig
+
+from .common import row
+
+ARCH = "qwen3-0.6b"
+SLOTS = 4
+BUCKETS = (4, 16)
+MAX_NEW = 4
+BLOCK = 4
+SHARED_LEN = 12          # 3 trie blocks; suffixes of 1..4 land in bucket 4
+SHARED_FRAC = 0.75       # >= 50%: the intra-run TTFT gate applies
+TRACE_REQUESTS = 16
+TRACE_RATE_HZ = 100.0
+
+
+def shared_prefix_trace(rng, vocab):
+    """Poisson arrivals where SHARED_FRAC of prompts open with one fixed
+    SHARED_LEN-token prefix (the system-prompt workload shape)."""
+    shared = rng.integers(1, vocab, SHARED_LEN).tolist()
+    t, out = 0.0, []
+    for _ in range(TRACE_REQUESTS):
+        t += float(rng.exponential(1.0 / TRACE_RATE_HZ))
+        if rng.random() < SHARED_FRAC:
+            suffix = rng.integers(1, vocab, int(rng.integers(1, 5))).tolist()
+            prompt = shared + suffix
+        else:
+            prompt = rng.integers(1, vocab, int(rng.integers(2, 5))).tolist()
+        out.append((t, prompt, MAX_NEW, 0))
+    return out
+
+
+def ttft_p50_us(results):
+    return float(np.percentile(np.array([r.ttft_s for r in results]), 50)) \
+        * 1e6
+
+
+def main():
+    cfg_warm = ServeConfig(arch=ARCH, num_slots=SLOTS,
+                           prefill_buckets=BUCKETS, max_new_tokens=MAX_NEW,
+                           prefill_batch=SLOTS, prefix_block=BLOCK)
+    cfg_cold = ServeConfig(arch=ARCH, num_slots=SLOTS,
+                           prefill_buckets=BUCKETS, max_new_tokens=MAX_NEW,
+                           prefill_batch=SLOTS, prefix_cache=False)
+    warm = build_engine(cfg_warm)
+    cold = build_engine(cfg_cold)
+
+    rng = np.random.default_rng(0)
+    vocab = warm.backend.vocab_size
+    trace = shared_prefix_trace(rng, vocab)
+
+    # warmup pass: compiles the whole (k, bucket) ladder on both engines and
+    # populates the warm engine's trie with the shared prefix
+    serve_trace(warm, trace)
+    serve_trace(cold, trace)
+
+    hit0 = (warm.prefix.stats.hit_tokens, warm.prefix.stats.prompt_tokens,
+            warm.prefix.stats.bytes_saved)
+    warm_results, _ = serve_trace(warm, trace)
+    cold_results, _ = serve_trace(cold, trace)
+
+    hit_tokens = warm.prefix.stats.hit_tokens - hit0[0]
+    prompt_tokens = warm.prefix.stats.prompt_tokens - hit0[1]
+    bytes_saved = warm.prefix.stats.bytes_saved - hit0[2]
+    hit_rate = 100.0 * hit_tokens / max(prompt_tokens, 1)
+
+    label = (f"[{ARCH},slots={SLOTS},"
+             f"buckets={'x'.join(map(str, BUCKETS))},"
+             f"shared={SHARED_LEN}tok@{SHARED_FRAC:.0%},"
+             f"reqs={TRACE_REQUESTS}]")
+    cold_us = ttft_p50_us(cold_results)
+    warm_us = ttft_p50_us(warm_results)
+    row(f"prefix_ttft_p50/cold{label}", cold_us, "full-prompt prefill")
+    row(f"prefix_ttft_p50/warm{label}", warm_us,
+        f"{warm_us / max(cold_us, 1e-9):.2f}x of cold (gate: <= 0.60x)")
+    row(f"prefix_hit_rate{label}", hit_rate,
+        f"{hit_tokens}/{prompt_tokens} prompt tokens from the trie "
+        "(HIGHER is better)")
+    row(f"prefix_bytes_saved{label}", float(bytes_saved),
+        f"KV bytes not re-prefilled; {warm.prefix.stats.evictions} "
+        "evictions (HIGHER is better)")
+
+
+if __name__ == "__main__":
+    main()

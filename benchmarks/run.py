@@ -21,15 +21,23 @@ import platform
 import sys
 
 from . import (bench_aggregation, bench_kernels, bench_mapreduce,
-               bench_overlap, bench_plan, bench_serve, bench_sketches,
-               bench_train, bench_windows)
+               bench_overlap, bench_plan, bench_prefix, bench_serve,
+               bench_sketches, bench_train, bench_windows)
 from . import common
 
 # rows guarded by --compare: the planner-lowered hot paths + the serve tier
 # + the overlap section's step rows + the windowed-streaming event rates
+# + the prefix-cache serving rows
 GUARDED_PREFIXES = ("segment_fold", "mean_by_key", "plan_auto", "serve_",
-                    "overlap_step", "window_events")
+                    "overlap_step", "window_events", "prefix_")
+# guarded rows where BIGGER is better (hit rates, bytes saved): the compare
+# gate inverts — fail when the new value drops below old / tolerance
+HIGHER_IS_BETTER = ("prefix_hit_rate", "prefix_bytes_saved")
 REGRESSION_TOLERANCE = 1.20   # fail on >20% slower than the previous artifact
+# intra-run gate for the prefix-cache section: warm TTFT p50 must be at
+# most this fraction of cold at >= 50% shared-prefix traffic — reusing
+# cached KV rows that does not cut time-to-first-token is dead weight
+PREFIX_TOLERANCE = 0.60
 # intra-run gate: layout='auto' must stay within this factor of the BEST
 # forced layout for the same case — the cost model may not mis-place a fold
 AUTO_TOLERANCE = 1.50
@@ -51,7 +59,10 @@ def compare_rows(new_rows, old_rows, *, tolerance: float = REGRESSION_TOLERANCE)
         if name not in old or old[name] <= 0:
             continue
         new_us = float(r["us_per_call"])
-        if new_us > old[name] * tolerance:
+        if any(name.startswith(p) for p in HIGHER_IS_BETTER):
+            if new_us < old[name] / tolerance:
+                regressions.append((name, old[name], new_us))
+        elif new_us > old[name] * tolerance:
             regressions.append((name, old[name], new_us))
     return regressions
 
@@ -116,12 +127,52 @@ def check_overlap_rows(rows, *, tolerance: float = OVERLAP_TOLERANCE):
     return violations
 
 
+def check_prefix_rows(rows, *, tolerance: float = PREFIX_TOLERANCE):
+    """Gate the prefix-cache section against itself (no baseline needed).
+
+    * ``prefix_ttft_p50/warm`` must be <= ``tolerance x`` the measured
+      ``prefix_ttft_p50/cold`` from the SAME run — the trace carries >= 50%
+      shared-prefix traffic, so a prefix cache that does not cut TTFT by
+      the declared factor is not pulling its weight.
+    * ``prefix_hit_rate`` must be > 0 — a gate run where nothing hit the
+      trie measured the wrong workload.
+
+    Returns a list of human-readable violation strings; empty when the
+    section did not run or everything held.
+    """
+    warm = cold = hit_rate = None
+    for r in rows:
+        name = str(r.get("name", ""))
+        us = float(r.get("us_per_call", 0.0))
+        if name.startswith("prefix_ttft_p50/warm"):
+            warm = us
+        elif name.startswith("prefix_ttft_p50/cold"):
+            cold = us
+        elif name.startswith("prefix_hit_rate"):
+            hit_rate = us
+    violations = []
+    if warm is not None and cold is not None and cold > 0 \
+            and warm > cold * tolerance:
+        violations.append(
+            f"prefix_ttft_p50/warm {warm:.1f}us > {tolerance:.2f}x cold "
+            f"{cold:.1f}us ({warm / cold:.2f}x): prefix reuse did not cut "
+            "TTFT under shared-prefix traffic")
+    if hit_rate is not None and hit_rate <= 0:
+        violations.append(
+            "prefix_hit_rate is 0%: the shared-prefix trace never hit the "
+            "trie")
+    return violations
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fast sections only (CI bench-smoke)")
     ap.add_argument("--serve", action="store_true",
                     help="batched serving section only (CI serve-smoke)")
+    ap.add_argument("--prefix", action="store_true",
+                    help="prefix KV-cache section only (CI serve-smoke; "
+                         "warm-vs-cold TTFT gate)")
     ap.add_argument("--overlap", action="store_true",
                     help="async-overlap section only (CI runs it under "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
@@ -137,7 +188,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
-    if args.serve:
+    if args.prefix:
+        print("# -- radix prefix KV cache: warm vs cold TTFT --------------------")
+        bench_prefix.main()
+    elif args.serve:
         print("# -- batched serving path (planner-lowered keyed folds, CPU) -----")
         bench_serve.main()
     elif args.overlap:
@@ -183,6 +237,12 @@ def main(argv=None) -> int:
         if overlap_violations:
             print("# OVERLAP GATE FAILED:")
             for v in overlap_violations:
+                print(f"#   {v}")
+            return 1
+        prefix_violations = check_prefix_rows(common.ROWS)
+        if prefix_violations:
+            print("# PREFIX CACHE GATE FAILED:")
+            for v in prefix_violations:
                 print(f"#   {v}")
             return 1
         auto_violations = check_auto_rows(common.ROWS)

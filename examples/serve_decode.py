@@ -34,8 +34,9 @@ for _ in range(args.requests):
 print(f"arch={args.arch}  slots={args.slots}  requests={args.requests}  "
       f"buckets={config.prefill_buckets}  gen<={args.gen}")
 
-# stream: every token event carries (uid, slot, index); "done" carries the
-# final per-request metrics folded by the engine's keyed masked fold
+# stream: every token event carries (uid, slot, index); "cache" reports the
+# admission's prefix-cache hit; "done" carries the final per-request metrics
+# folded by the engine's keyed masked fold
 streamed = {u: [] for u in uids}
 for event in engine.run():
     if event.kind == "token":
@@ -43,7 +44,11 @@ for event in engine.run():
         if event.index == 0:
             print(f"  uid={event.uid} first token on slot {event.slot} "
                   f"(ttft {event.ttft_s * 1e3:.0f}ms)")
-    else:
+    elif event.kind == "cache" and event.hit_tokens:
+        print(f"  uid={event.uid} prefix hit: {event.hit_tokens}/"
+              f"{event.prompt_tokens} prompt tokens from the trie "
+              f"({event.bytes_saved} KV bytes not re-prefilled)")
+    elif event.kind == "done":
         r = event.result
         print(f"  uid={r.uid} done: {len(r.tokens)} tokens, "
               f"logprob_sum={r.logprob_sum:.2f}, "
@@ -53,5 +58,9 @@ st = engine.stats
 assert all(streamed[u] == engine.result(u).tokens for u in uids)
 print(f"served {st.completed} requests / {st.generated_tokens} tokens in "
       f"{st.steps} rolling decode steps, {st.slot_reuses} slot reuses")
+if engine.prefix is not None:
+    ps = engine.prefix.stats
+    print(f"prefix cache: {engine.prefix.node_count} nodes, "
+          f"hit_rate={ps.hit_rate():.0%}, {ps.bytes_saved} bytes saved")
 print(f"compiled shapes: {engine.compile_counts()} "
-      f"(bound: 2 + {len(config.prefill_buckets)} buckets)")
+      f"(bound: {engine.compile_bound()})")

@@ -577,6 +577,22 @@ def product(**named: Monoid) -> Monoid:
     )
 
 
+def cache_stats(half_life: float) -> Monoid:
+    """Per-node prefix-cache bookkeeping state, folded as ONE monoid.
+
+    The radix prefix KV cache (``runtime/prefix_cache.py``) keys a stats
+    table by trie-node id and updates it with a single planner-lowered keyed
+    fold per engine step — hit counting (additive), resident-byte accounting
+    (additive), and the :func:`decayed_lru` eviction score all ride in one
+    :func:`product` value, so the cache's whole bookkeeping is one
+    ``execute_fold`` call per step, the same shape as the engine's
+    per-request metrics fold.
+    """
+    import dataclasses as _dc
+    m = product(bytes=sum_, hits=sum_, score=decayed_lru(half_life))
+    return _dc.replace(m, name=f"cache_stats(hl={half_life:g})")
+
+
 REGISTRY: Dict[str, Monoid] = {
     "sum": sum_,
     "prod": prod,
@@ -696,3 +712,12 @@ register_monoid(decayed_count(16.0), lambda: [
 register_monoid(decayed_lru(16.0), lambda: [
     (jnp.abs(_f32(s, ())), jnp.asarray(t, jnp.float32))
     for s, t in ((6, -2.0), (7, 3.0), (8, 8.0))])
+
+# the prefix-cache stats product (PR 10): samples exercise the additive
+# hit/byte columns together with the decayed-LRU score column, again with
+# distinct finite anchor times including a negative one
+register_monoid(cache_stats(32.0), lambda: [
+    {"bytes": jnp.abs(_f32(s, ())) * 1e3,
+     "hits": jnp.abs(_f32(s + 10, ())),
+     "score": (jnp.abs(_f32(s + 20, ())), jnp.asarray(t, jnp.float32))}
+    for s, t in ((11, -4.0), (12, 1.5), (13, 6.0))])

@@ -309,7 +309,11 @@ class WindowedMetrics:
       :class:`TumblingWindow` token counter;
     * ``done`` events push ``(latency, ttft, tokens)`` into the user's
       **sliding window** of the last ``window`` completed requests (the
-      mean-pair monoid — one two-stacks window carries all three means).
+      mean-pair monoid — one two-stacks window carries all three means);
+    * ``cache`` events (prefix-cache admissions) fold
+      ``(hit_tokens, prompt_tokens, bytes_saved)`` into a fleet-wide
+      tumbling counter — the live prefix hit rate is a ratio of two sums,
+      so the windowed state stays a plain additive monoid.
 
     State is O(window) per user and O(1) for the fleet, independent of
     traffic volume — the streaming half of the Summingbird property.
@@ -324,7 +328,12 @@ class WindowedMetrics:
         self._rate: Dict[Any, Tuple] = {}
         self._fleet = TumblingWindow(monoids.sum_, tumble_s,
                                      example=jnp.zeros((), jnp.float32))
+        # (hit_tokens, prompt_tokens, bytes_saved) per tumble — one
+        # vector-valued sum carries all three prefix-cache counters
+        self._prefix = TumblingWindow(monoids.sum_, tumble_s,
+                                      example=jnp.zeros((3,), jnp.float32))
         self.closed_fleet_windows: List[WindowResult] = []
+        self.closed_prefix_windows: List[WindowResult] = []
         self.events = 0
 
     # -- the consumer entry point -------------------------------------------
@@ -349,6 +358,11 @@ class WindowedMetrics:
             w.push((jnp.asarray([r.latency_s, r.ttft_s,
                                  float(len(r.tokens))], jnp.float32),
                     jnp.ones((), jnp.int32)))
+        elif event.kind == "cache":
+            v = jnp.asarray([event.hit_tokens, event.prompt_tokens,
+                             event.bytes_saved], jnp.float32)
+            self.closed_prefix_windows.extend(
+                self._prefix.push(v, event.time_s))
 
     # -- queries ------------------------------------------------------------
     def users(self) -> List[Any]:
@@ -377,6 +391,19 @@ class WindowedMetrics:
                      for r in self.closed_fleet_windows)
         open_ = sum(float(np.asarray(r.value)) for r in self._fleet.flush())
         return closed + open_
+
+    def fleet_prefix(self) -> Dict[str, float]:
+        """Fleet prefix-cache counters across closed windows plus the open
+        one: hit/prompt token totals, bytes saved, and the hit rate."""
+        total = np.zeros((3,), np.float64)
+        for r in self.closed_prefix_windows:
+            total += np.asarray(r.value, np.float64)
+        for r in self._prefix.flush():
+            total += np.asarray(r.value, np.float64)
+        return {"hit_tokens": float(total[0]),
+                "prompt_tokens": float(total[1]),
+                "bytes_saved": float(total[2]),
+                "hit_rate": float(total[0] / max(total[1], 1.0))}
 
     def summary(self, now: float) -> Dict[Any, Dict[str, float]]:
         """Per-user snapshot: windowed means + decayed token rate."""

@@ -37,7 +37,7 @@ from ..configs import ShapeCell, context_spec, get_config
 from ..data.windows import WindowedMetrics
 from ..dist import sharding as shd
 from ..models import (RunCtx, decode_step, init_cache, init_params,
-                      param_axes, param_shapes)
+                      param_axes, param_shapes, positional_cache)
 from ..runtime.batcher import DecodeBatch
 from ..runtime.engine import (ContinuousEngine, EngineBackend, ServeConfig,
                               decode_metrics_init, decode_metrics_plan,
@@ -95,6 +95,9 @@ def build_engine(config: ServeConfig, *,
 
     backend = EngineBackend(decode=decode, init_cache=make_cache,
                             params=params, vocab_size=cfg.vocab_size,
+                            # prefix KV sharing needs position-indexed cache
+                            # rows; recurrent/cross-attn substrates opt out
+                            prefix_sharing=positional_cache(cfg),
                             place=place)
     return ContinuousEngine(backend, config, clock=clock)
 
@@ -196,15 +199,25 @@ def run_batched_decode(engine: ContinuousEngine, batch: DecodeBatch, *,
 
 def poisson_trace(rng: np.random.Generator, n: int, rate_hz: float,
                   min_prompt: int, max_prompt: int, vocab: int,
-                  max_new: int, users: int = 1):
+                  max_new: int, users: int = 1,
+                  shared_frac: float = 0.0, shared_len: int = 0):
     """[(arrival_offset_s, prompt, max_new, user)] — synthetic open-loop
-    traffic; requests attribute uniformly to ``users`` synthetic users."""
+    traffic; requests attribute uniformly to ``users`` synthetic users.
+
+    ``shared_frac`` of the requests open with a fixed ``shared_len``-token
+    prefix (one "system prompt" drawn per trace) — the workload shape
+    prefix KV caching exploits."""
+    shared = rng.integers(1, vocab, shared_len).tolist() if shared_len else []
     t = 0.0
     out = []
     for _ in range(n):
         t += float(rng.exponential(1.0 / rate_hz)) if rate_hz > 0 else 0.0
         plen = int(rng.integers(min_prompt, max_prompt + 1))
-        prompt = rng.integers(1, vocab, plen).tolist()
+        if shared and plen > shared_len and rng.random() < shared_frac:
+            prompt = shared + rng.integers(1, vocab,
+                                           plen - shared_len).tolist()
+        else:
+            prompt = rng.integers(1, vocab, plen).tolist()
         out.append((t, prompt, max_new, int(rng.integers(0, users))))
     return out
 
@@ -259,6 +272,16 @@ def main(argv=None):
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--users", type=int, default=4,
                     help="synthetic user population for per-user windows")
+    ap.add_argument("--prefill-batch", type=int, default=4,
+                    help="max same-bucket admissions per prefill program")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the radix prefix KV cache")
+    ap.add_argument("--prefix-block", type=int, default=4,
+                    help="tokens per prefix-cache trie node")
+    ap.add_argument("--shared-frac", type=float, default=0.0,
+                    help="fraction of requests opening with a shared prefix")
+    ap.add_argument("--shared-len", type=int, default=0,
+                    help="token length of the shared prefix")
     args = ap.parse_args(argv)
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
@@ -268,7 +291,10 @@ def main(argv=None):
     config = ServeConfig(arch=args.arch, num_slots=args.slots,
                          prefill_buckets=buckets, max_new_tokens=args.gen,
                          temperature=args.temperature, seed=args.seed,
-                         model_parallel=args.model_parallel, full=args.full)
+                         model_parallel=args.model_parallel, full=args.full,
+                         prefill_batch=args.prefill_batch,
+                         prefix_cache=not args.no_prefix_cache,
+                         prefix_block=args.prefix_block)
     engine = build_engine(config)
     metrics = WindowedMetrics(window=32, half_life_s=60.0)
     engine.subscribe(metrics.observe)
@@ -282,7 +308,9 @@ def main(argv=None):
     vocab = engine.backend.vocab_size
     trace = poisson_trace(rng, args.requests, args.rate, args.min_prompt,
                           args.max_prompt, vocab, args.gen,
-                          users=max(1, args.users))
+                          users=max(1, args.users),
+                          shared_frac=args.shared_frac,
+                          shared_len=args.shared_len)
     results, wall = serve_trace(engine, trace, quiet=False)
 
     ttfts = np.array([r.ttft_s for r in results])
@@ -291,10 +319,24 @@ def main(argv=None):
     print(f"served {len(results)} requests, {new_tokens} tokens in "
           f"{wall:.2f}s ({new_tokens / wall:.0f} tok/s) | "
           f"steps={st.steps} slot_reuses={st.slot_reuses} "
+          f"prefills={st.prefill_calls} batched={st.batched_admissions} "
           f"ttft p50={np.percentile(ttfts, 50) * 1e3:.1f}ms "
           f"p99={np.percentile(ttfts, 99) * 1e3:.1f}ms")
     print(f"compiled shapes: {engine.compile_counts()} "
-          f"(bound: 2 + {len(buckets)} buckets)")
+          f"(bound: {engine.compile_bound()})")
+    if engine.prefix is not None:
+        ps = engine.prefix.stats
+        fp = metrics.fleet_prefix()
+        print(f"prefix cache: nodes={engine.prefix.node_count} "
+              f"resident={engine.prefix.total_bytes}B "
+              f"(fold-accounted {engine.prefix.accounted_bytes()}B) "
+              f"hit_rate={ps.hit_rate():.0%} "
+              f"bytes_saved={ps.bytes_saved} evictions={ps.evictions} "
+              f"folds={ps.folds}")
+        print(f"fleet prefix windows: hit_rate={fp['hit_rate']:.0%} "
+              f"hit_tokens={fp['hit_tokens']:.0f}/"
+              f"{fp['prompt_tokens']:.0f} "
+              f"bytes_saved={fp['bytes_saved']:.0f}")
     now = time.perf_counter()
     print(f"per-user windows (last {metrics.window} requests, token-rate "
           f"half-life {metrics.half_life_s:g}s; fleet tokens "

@@ -1,5 +1,6 @@
 """repro.models — pure-JAX model substrate for the assigned architecture pool."""
 from .common import ModelConfig, ParamBuilder, rms_norm, rotary_embed
 from .transformer import (RunCtx, decode_step, encode, forward, init_cache,
-                          init_params, loss_fn, param_axes, param_shapes, unembed)
+                          init_params, loss_fn, param_axes, param_shapes,
+                          positional_cache, unembed)
 from . import attention, moe, ssm

@@ -248,19 +248,37 @@ def decode_positions(pos: jnp.ndarray, batch: int) -> jnp.ndarray:
     return jnp.full((batch, 1), pos, jnp.int32)
 
 
+def cache_span_update(cache: jnp.ndarray, new: jnp.ndarray,
+                      pos: jnp.ndarray, *, seq_axis: int = 1) -> jnp.ndarray:
+    """Write a contiguous span of rows into a cache at scalar or per-row
+    positions.
+
+    cache: (..., S, ...) with the sequence axis at ``seq_axis``; new is the
+    same shape with span length L in place of S; pos: () or (B,) start
+    positions (the batch axis is ``seq_axis - 1`` for the per-row form).
+    The single-row case (L == 1) is the classic decode write; the span case
+    is the prefix-cache scatter — a cached KV prefix lands in the slot cache
+    in one write instead of L decode steps.
+    """
+    if jnp.ndim(pos) == 1:
+        return jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+                c, n, i, axis=seq_axis - 1),
+            in_axes=(seq_axis - 1, seq_axis - 1, 0),
+            out_axes=seq_axis - 1)(cache, new, pos)
+    return jax.lax.dynamic_update_slice_in_dim(cache, new, pos, axis=seq_axis)
+
+
 def cache_row_update(cache: jnp.ndarray, new: jnp.ndarray,
                      pos: jnp.ndarray) -> jnp.ndarray:
     """Write one new-token slice into a cache at scalar or per-row positions.
 
     cache: (B, S, ...); new: (B, 1, ...); pos: () or (B,).  The per-row form
     is a vmapped dynamic_update_slice — each request slot writes at its own
-    position (continuous batching).
+    position (continuous batching).  One-row special case of
+    :func:`cache_span_update`.
     """
-    if jnp.ndim(pos) == 1:
-        return jax.vmap(
-            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
-        )(cache, new, pos)
-    return jax.lax.dynamic_update_slice_in_dim(cache, new, pos, axis=1)
+    return cache_span_update(cache, new, pos, seq_axis=1)
 
 
 def attention_decode(p: Dict, cfg: ModelConfig, x: jnp.ndarray,

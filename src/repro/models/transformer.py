@@ -383,6 +383,23 @@ def _init_layer_cache(cfg: ModelConfig, ltype: str, batch: int, max_seq: int,
     raise ValueError(ltype)
 
 
+def positional_cache(cfg: ModelConfig) -> bool:
+    """True when every decode-cache leaf (besides ``pos``) is indexed by
+    absolute sequence position — KV/MLA-latent rows at position i depend
+    only on tokens 0..i and on i itself (RoPE at absolute positions).
+
+    This is the property prefix KV sharing relies on: a cached prefix's
+    rows can be scattered into a fresh slot cache verbatim and the decode
+    is bit-identical to recomputing them.  Recurrent state (mamba/*lstm)
+    and context KV (cross-attention, encoder-decoder) are not row-per-
+    position, so those archs opt out of the prefix cache.
+    """
+    if cfg.encoder_layers > 0 or cfg.decoder_cross_attn:
+        return False
+    return all(cfg.block_type(i) in ("attn", "local")
+               for i in range(cfg.num_layers))
+
+
 def init_cache(params: Pytree, cfg: ModelConfig, batch: int, max_seq: int, *,
                context: Optional[jnp.ndarray] = None,
                ctx: RunCtx = RunCtx(), pos_per_slot: bool = False) -> Pytree:

@@ -8,3 +8,5 @@ from .engine import (ContinuousEngine, EngineBackend, EngineStats,
 from .fault_tolerance import (ElasticController, MeshPlan, PreemptionHandler,
                               StragglerMonitor, StragglerReport,
                               checkpoint_interval, plan_remesh)
+from .prefix_cache import (PrefixCache, PrefixCacheConfig, PrefixCacheStats,
+                           PrefixHit)

@@ -18,6 +18,13 @@ Flush policies (both host-side, deterministic, injectable clock):
   waited this long (latency: bound head-of-line blocking).  Partial batches
   still occupy ``num_slots`` segment ids; the empty slots are masked out of
   the fold with ``valid_mask`` — the ragged case, not a smaller compile.
+
+The continuous engine uses the FIFO directly (``take()``): each step it
+drains as many waiting requests as it has free slots, then groups them by
+prefill SUFFIX bucket (prompt length minus cached-prefix length) into
+shared ``(k, bucket)`` prefill programs on a declared power-of-two
+k-ladder — grouping lives in the engine, not here, because a request's
+bucket is only known after its prefix-cache lookup.
 """
 from __future__ import annotations
 

@@ -16,14 +16,19 @@ Compilation is bucketed so slot churn never recompiles anything:
 
 * ONE decode-step program at ``(num_slots, 1)`` — model forward + per-row
   sampling + the keyed masked metrics fold, jitted together.
-* ONE prefill program per ``prefill_bucket`` in the ladder — a
-  ``lax.scan`` of the decode step over a prompt padded to the bucket,
-  against a fresh single-slot cache.
-* ONE slot-write program — scatter the prefilled single-slot cache into
-  the rolling cache at the freed slot (and reset that slot's metrics row).
+* ONE prefill program per ``(k, bucket)`` pair — up to k same-bucket
+  admissions ``lax.scan`` the decode step together over their prompts
+  padded to the bucket, against a fresh k-row cache whose first ``slab``
+  rows were scattered from the radix prefix cache
+  (``runtime/prefix_cache.py``) so only the uncached SUFFIX is computed
+  (buckets are chosen on suffix length).
+* ONE slot-write program per k — scatter the prefilled k-row cache into
+  the rolling cache at the freed slots (resetting their metrics rows) —
+  and, with the prefix cache on, ONE gather program per k that slices the
+  first ``slab`` KV rows back out for the trie.
 
 So the number of distinct jitted shapes is bounded by
-``len(prefill_buckets) + 2`` for the whole engine lifetime (the
+:meth:`ContinuousEngine.compile_bound` for the whole engine lifetime (the
 recompile-count test in tests/test_serving.py asserts this).  Padding to
 the nearest bucket trades bounded extra prefill FLOPs for zero recompiles —
 the external-memory cost-model trade (Greiner & Jacob, PAPERS.md): pay
@@ -53,7 +58,9 @@ import numpy as np
 
 from ..core import monoids
 from ..core.plan import Plan, execute_fold, plan_fold
+from ..models.attention import cache_span_update
 from .batcher import Request, RequestBatcher
+from .prefix_cache import PrefixCache, PrefixCacheConfig, PrefixHit
 
 # ---------------------------------------------------------------------------
 # the per-request metrics fold (request slot == segment id)
@@ -155,6 +162,18 @@ class ServeConfig:
     seed: int = 0                            # sampling PRNG seed
     model_parallel: int = 1
     full: bool = False                       # full-size config (default: smoke)
+    # batched same-bucket admission: up to this many waiting requests with
+    # the same suffix bucket prefill in ONE (k, bucket) program; the power-
+    # of-two k-ladder keeps the compile bound declared
+    prefill_batch: int = 1
+    # radix prefix KV cache (runtime/prefix_cache.py): admissions look up
+    # the longest cached block-aligned prefix, scatter its KV rows into the
+    # slot cache, and prefill only the remaining suffix
+    prefix_cache: bool = True
+    prefix_block: int = 4                    # tokens per trie node
+    prefix_capacity: int = 256               # trie nodes == stats-table rows
+    prefix_max_bytes: Optional[int] = None   # resident-KV budget (None = off)
+    prefix_half_life_s: float = 60.0         # decayed-LRU eviction half life
 
     def __post_init__(self):
         buckets = tuple(int(b) for b in self.prefill_buckets)
@@ -170,10 +189,34 @@ class ServeConfig:
             raise ValueError("max_new_tokens must be >= 1")
         if self.temperature < 0:
             raise ValueError("temperature must be >= 0")
+        if self.prefill_batch < 1:
+            raise ValueError("prefill_batch must be >= 1")
+        if self.prefix_block < 1:
+            raise ValueError("prefix_block must be >= 1")
+        if self.prefix_capacity < 1:
+            raise ValueError("prefix_capacity must be >= 1")
 
     @property
     def max_prompt(self) -> int:
         return self.prefill_buckets[-1]
+
+    @property
+    def prefill_k_ladder(self) -> Tuple[int, ...]:
+        """Powers of two up to min(prefill_batch, num_slots) — the declared
+        admission batch sizes (each is one compiled (k, bucket) program)."""
+        ks, k = [], 1
+        while k <= min(self.prefill_batch, self.num_slots):
+            ks.append(k)
+            k *= 2
+        return tuple(ks)
+
+    @property
+    def prefix_slab(self) -> int:
+        """Per-request prefix rows every prefill program accepts: the
+        largest block multiple strictly below the biggest bucket (a hit
+        must leave >= 1 suffix token to produce the first logits)."""
+        return ((self.max_prompt - 1) // self.prefix_block) \
+            * self.prefix_block
 
     @property
     def max_seq(self) -> int:
@@ -217,10 +260,13 @@ class StreamEvent:
 
     kind == "token": ``token``/``index`` are set; ``ttft_s`` on index 0.
     kind == "done":  ``result`` carries the full :class:`RequestResult`.
+    kind == "cache": emitted at admission when the prefix cache is on —
+      ``hit_tokens``/``prompt_tokens``/``bytes_saved`` feed the fleet
+      prefix-hit-rate windows (``data.windows.WindowedMetrics``).
     """
 
     uid: int
-    kind: str                     # "token" | "done"
+    kind: str                     # "token" | "done" | "cache"
     slot: int
     step: int                     # engine step counter at emission
     time_s: float
@@ -229,6 +275,9 @@ class StreamEvent:
     index: Optional[int] = None   # position in the generated sequence
     ttft_s: Optional[float] = None
     result: Optional[RequestResult] = None
+    hit_tokens: Optional[int] = None      # prompt tokens served from cache
+    prompt_tokens: Optional[int] = None   # total prompt tokens
+    bytes_saved: Optional[int] = None     # KV bytes not re-prefilled
 
 
 # ---------------------------------------------------------------------------
@@ -255,6 +304,11 @@ class EngineBackend:
     params: Any
     vocab_size: int
     stacked_key: str = "layers"   # cache subtree with a leading stack dim
+    # True iff every non-``pos`` cache leaf is indexed by absolute sequence
+    # position (see models.transformer.positional_cache) — the property
+    # prefix KV sharing needs; recurrent-state substrates set this False
+    # and the engine keeps cold prefills only
+    prefix_sharing: bool = True
     # placement for the engine's initial device state (rolling cache +
     # metrics table).  Mesh-aware backends should commit with the SAME
     # sharding their jitted outputs carry — otherwise the first write_slot
@@ -275,6 +329,8 @@ class EngineStats:
     steps: int = 0                # decode steps over the rolling population
     slot_reuses: int = 0          # admissions into a previously-used slot
     generated_tokens: int = 0
+    prefill_calls: int = 0        # prefill program invocations (k >= 1 each)
+    batched_admissions: int = 0   # admissions that shared a k > 1 prefill
 
 
 @dataclasses.dataclass
@@ -295,15 +351,31 @@ class _SlotState:
         return len(self.tokens)
 
 
+@dataclasses.dataclass
+class _AdmitJob:
+    """One admission in flight: request + slot + prefix-cache hit."""
+
+    req: Request
+    slot: int
+    plen: int
+    bucket: int                   # SUFFIX bucket (prompt minus cached prefix)
+    seed: int
+    hit: Optional[PrefixHit]
+    first: int = 0                # first sampled token, set by _admit_chunk
+
+
 class ContinuousEngine:
     """Admit and retire requests *mid-decode* over rolling request slots.
 
     Lifecycle per request: ``submit`` enqueues it on the FIFO admission
-    queue (a :class:`~repro.runtime.batcher.RequestBatcher`); when a slot
-    frees, ``_admit`` pads the prompt to the nearest prefill bucket, runs
-    the bucket's compiled prefill into a single-slot cache, scatters it
-    into the rolling cache (resetting the slot's cache position and metrics
-    row), and streams the first token (TTFT).  Every ``step()`` then
+    queue (a :class:`~repro.runtime.batcher.RequestBatcher`); when slots
+    free, ``_admit`` looks up each prompt's longest cached prefix in the
+    radix trie, groups same-suffix-bucket requests into one compiled
+    ``(k, bucket)`` prefill over a fresh k-row cache seeded with the cached
+    prefix KV rows, scatters the result into the rolling cache (resetting
+    each slot's cache position and metrics row), feeds the new KV blocks
+    back into the trie, and streams each first token (TTFT).  Every
+    ``step()`` then
     advances ALL occupied slots one token — model forward, per-row
     sampling, and ONE planner-lowered keyed masked fold of the per-request
     metrics — and retires slots that hit ``eos_id`` or their token budget,
@@ -333,6 +405,32 @@ class ContinuousEngine:
         place = backend.place if backend.place is not None else (lambda x: x)
         self._cache = place(backend.init_cache(config.num_slots, True))
         self._table = place(decode_metrics_init(config.num_slots))
+        # -- radix prefix KV cache (runtime/prefix_cache.py) ----------------
+        self.prefix: Optional[PrefixCache] = None
+        self._slab = 0
+        if config.prefix_cache and backend.prefix_sharing \
+                and config.prefix_slab >= config.prefix_block:
+            self.prefix = PrefixCache(
+                PrefixCacheConfig(block=config.prefix_block,
+                                  capacity=config.prefix_capacity,
+                                  max_bytes=config.prefix_max_bytes,
+                                  half_life_s=config.prefix_half_life_s),
+                clock=clock)
+            self._slab = config.prefix_slab
+            # flattened view of the cache WITHOUT ``pos``: leaf order, batch
+            # and sequence axes per leaf — the host-side (dis)assembly spec
+            # for prefix slabs (the trie stores opaque per-leaf numpy blocks)
+            tmpl = jax.eval_shape(lambda: backend.init_cache(1, True))
+            kv_tmpl = {k: v for k, v in tmpl.items() if k != "pos"}
+            leaves, treedef = jax.tree_util.tree_flatten_with_path(kv_tmpl)
+            self._kv_treedef = treedef
+            self._kv_shapes = [tuple(leaf.shape) for _, leaf in leaves]
+            self._kv_dtypes = [leaf.dtype for _, leaf in leaves]
+            self._kv_batch_axes = []
+            for path, _ in leaves:
+                keys = [getattr(e, "key", None) for e in path]
+                self._kv_batch_axes.append(
+                    1 if backend.stacked_key in keys else 0)
         self._build_compiled()
 
     # -- compiled programs (the whole shape ladder) -------------------------
@@ -369,57 +467,134 @@ class ContinuousEngine:
 
         self._step_fn = jax.jit(step_impl, donate_argnums=(1,))
 
-        def make_prefill(bucket: int):
-            def prefill_impl(params, cache1, toks, length, seed):
+        slab = self._slab
+        kv_treedef = getattr(self, "_kv_treedef", None)
+
+        def load_prefix(cachek, prefix_leaves, prefix_len):
+            """Scatter cached prefix KV rows into a fresh k-row prefill
+            cache (rows beyond each request's prefix are zeros over zeros)
+            and start each row's position at its prefix length."""
+            kv = {key: val for key, val in cachek.items() if key != "pos"}
+            slabs = jax.tree_util.tree_unflatten(kv_treedef, prefix_leaves)
+
+            def put(path, big, small):
+                keys = [getattr(e, "key", None) for e in path]
+                axis = 2 if stacked in keys else 1
+                return cache_span_update(big, small.astype(big.dtype),
+                                         jnp.int32(0), seq_axis=axis)
+
+            kv = jax.tree_util.tree_map_with_path(put, kv, slabs)
+            kv["pos"] = jnp.asarray(prefix_len, cachek["pos"].dtype)
+            return kv
+
+        def make_prefill(k: int, bucket: int):
+            def scan_suffix(params, cachek, toks, lengths, seeds):
                 def body(carry, x):
                     cache, last = carry
                     tok, i = x
                     logits, cache = decode(params, cache, tok[:, None])
-                    last = jnp.where(i == length - 1, logits, last)
+                    last = jnp.where((i == lengths - 1)[:, None], logits,
+                                     last)
                     return (cache, last), None
 
                 xs = (toks.T, jnp.arange(bucket))
-                (cache1, last), _ = jax.lax.scan(
-                    body, (cache1, jnp.zeros((1, V), jnp.float32)), xs)
-                sampled = sample_rows(last, jnp.full((1,), seed, jnp.int32),
-                                      jnp.zeros((1,), jnp.int32))
-                row = metric_rows(last, sampled, eos)[0]
-                return cache1, sampled[0], row
+                (cachek, last), _ = jax.lax.scan(
+                    body, (cachek, jnp.zeros((k, V), jnp.float32)), xs)
+                sampled = sample_rows(last, seeds,
+                                      jnp.zeros((k,), jnp.int32))
+                return cachek, sampled, metric_rows(last, sampled, eos)
+
+            if slab:
+                def prefill_impl(params, cachek, toks, lengths, seeds,
+                                 prefix_leaves, prefix_len):
+                    cachek = load_prefix(cachek, prefix_leaves, prefix_len)
+                    return scan_suffix(params, cachek, toks, lengths, seeds)
+            else:
+                def prefill_impl(params, cachek, toks, lengths, seeds):
+                    return scan_suffix(params, cachek, toks, lengths, seeds)
 
             return jax.jit(prefill_impl, donate_argnums=(1,))
 
-        self._prefill_fns = {b: make_prefill(b) for b in cfg.prefill_buckets}
+        self._prefill_fns = {(k, b): make_prefill(k, b)
+                             for k in cfg.prefill_k_ladder
+                             for b in cfg.prefill_buckets}
 
-        def write_impl(cache, cache1, slot, length, table, row):
-            def put(path, big, small):
-                keys = [getattr(e, "key", None) for e in path]
-                if keys and keys[0] == "pos":
-                    # slot restarts at its prompt length (positions are
-                    # per-slot: init_cache(pos_per_slot=True))
-                    return big.at[slot].set(jnp.asarray(length, big.dtype))
-                axis = 1 if stacked in keys else 0
-                return jax.lax.dynamic_update_slice_in_dim(
-                    big, small, slot, axis=axis)
+        def make_write(k: int):
+            def write_impl(cache, cachek, slots, lengths, table, rows):
+                def put(path, big, small):
+                    keys = [getattr(e, "key", None) for e in path]
+                    if keys and keys[0] == "pos":
+                        # each slot restarts at its full prompt length
+                        # (positions are per-slot)
+                        return big.at[slots].set(lengths.astype(big.dtype))
+                    axis = 1 if stacked in keys else 0
+                    out = big
+                    for r in range(k):
+                        piece = jax.lax.dynamic_slice_in_dim(
+                            small, r, 1, axis=axis)
+                        out = jax.lax.dynamic_update_slice_in_dim(
+                            out, piece.astype(out.dtype), slots[r],
+                            axis=axis)
+                    return out
 
-            new = jax.tree_util.tree_map_with_path(put, cache, cache1)
-            # reset + first token in one write: the row IS the first fold
-            return new, table.at[slot].set(row)
+                new = jax.tree_util.tree_map_with_path(put, cache, cachek)
+                # reset + first tokens in one write: each row IS its slot's
+                # first metrics fold
+                return new, table.at[slots].set(rows)
 
-        self._write_fn = jax.jit(write_impl, donate_argnums=(0, 1, 4))
+            return jax.jit(write_impl, donate_argnums=(0, 1, 4))
+
+        self._write_fns = {k: make_write(k) for k in cfg.prefill_k_ladder}
+
+        def make_gather(k: int):
+            def gather_impl(cachek):
+                kv = {key: val for key, val in cachek.items()
+                      if key != "pos"}
+
+                def take(path, leaf):
+                    keys = [getattr(e, "key", None) for e in path]
+                    axis = 2 if stacked in keys else 1
+                    return jax.lax.slice_in_dim(leaf, 0, slab, axis=axis)
+
+                return jax.tree_util.tree_map_with_path(take, kv)
+
+            return jax.jit(gather_impl)
+
+        self._gather_fns = {} if not slab else \
+            {k: make_gather(k) for k in cfg.prefill_k_ladder}
 
     def compile_counts(self) -> Dict[str, int]:
-        """Distinct compiled shapes per engine program (the bucket-ladder
-        bound: step == 1, write_slot == 1, each prefill bucket <= 1)."""
+        """Distinct compiled shapes per engine program.  The declared bound
+        (:meth:`compile_bound`): one step program, one write + one prefix
+        gather per admission batch size k, one prefill per (k, bucket), and
+        the prefix cache's stats fold + row reset."""
         def n(f):
             try:
                 return int(f._cache_size())
             except Exception:      # pragma: no cover - older jax
                 return -1
 
-        counts = {"step": n(self._step_fn), "write_slot": n(self._write_fn)}
-        for b, f in self._prefill_fns.items():
-            counts[f"prefill_{b}"] = n(f)
+        counts = {"step": n(self._step_fn)}
+        for (k, b), f in self._prefill_fns.items():
+            counts[f"prefill_k{k}_b{b}"] = n(f)
+        for k, f in self._write_fns.items():
+            counts[f"write_k{k}"] = n(f)
+        for k, f in self._gather_fns.items():
+            counts[f"gather_k{k}"] = n(f)
+        if self.prefix is not None:
+            counts.update(self.prefix.compile_counts())
         return counts
+
+    def compile_bound(self) -> int:
+        """The declared ceiling on distinct compiled shapes over ANY trace:
+        ``1 step + |k| x |buckets| prefills + |k| writes`` plus, with the
+        prefix cache on, ``|k| gathers + stats fold + row reset``."""
+        cfg = self.config
+        kk = len(cfg.prefill_k_ladder)
+        n = 1 + kk * len(cfg.prefill_buckets) + kk
+        if self.prefix is not None:
+            n += kk + 2
+        return n
 
     # -- request lifecycle --------------------------------------------------
 
@@ -471,42 +646,166 @@ class ContinuousEngine:
         free = [i for i, s in enumerate(self._slots) if s is None]
         if not free:
             return
-        for req, slot in zip(self.queue.take(len(free)), free):
-            self._admit_one(req, slot, events)
-
-    def _admit_one(self, req: Request, slot: int,
-                   events: List[StreamEvent]) -> None:
+        reqs = self.queue.take(len(free))
+        if not reqs:
+            return
         cfg = self.config
-        plen = len(req.prompt)
-        bucket = cfg.bucket_for(plen)
-        toks = np.full((1, bucket), cfg.pad_id, np.int32)
-        toks[0, :plen] = req.prompt
-        seed = self._seeds.pop(req.uid, req.uid)
-        cache1 = self.backend.init_cache(1, False)
-        cache1, first, row = self._prefill_fns[bucket](
-            self.backend.params, cache1, jnp.asarray(toks), plen, seed)
-        self._cache, self._table = self._write_fn(
-            self._cache, cache1, slot, plen, self._table, row)
-        first = int(jax.device_get(first))
+        jobs: List[_AdmitJob] = []
+        for req, slot in zip(reqs, free):
+            plen = len(req.prompt)
+            # the trie walk: requests prefill only their uncached suffix,
+            # and the prefill bucket is chosen on SUFFIX length
+            hit = self.prefix.lookup(req.prompt) \
+                if self.prefix is not None else None
+            hit_len = hit.length if hit is not None else 0
+            jobs.append(_AdmitJob(
+                req=req, slot=slot, plen=plen, hit=hit,
+                seed=self._seeds.pop(req.uid, req.uid),
+                bucket=cfg.bucket_for(plen - hit_len)))
+
+        # group same-bucket admissions into shared (k, bucket) prefill
+        # programs, k drawn from the declared power-of-two ladder
+        groups: Dict[int, List[_AdmitJob]] = {}
+        order: List[int] = []
+        for job in jobs:
+            if job.bucket not in groups:
+                groups[job.bucket] = []
+                order.append(job.bucket)
+            groups[job.bucket].append(job)
+        ladder = cfg.prefill_k_ladder
+        for b in order:
+            group = groups[b]
+            while group:
+                k = max(x for x in ladder if x <= len(group))
+                self._admit_chunk(group[:k], b)
+                group = group[k:]
+
+        # stream in arrival order regardless of chunk grouping: the
+        # admission accounting ("cache") event, then the first token
         now = self._clock()
-        ttft = now - req.arrival_s
-        st = _SlotState(uid=req.uid, user=req.user, seed=seed,
-                        prompt_len=plen, bucket=bucket,
-                        max_new=req.max_new_tokens,
-                        arrival_s=req.arrival_s, ttft_s=ttft,
-                        tokens=[first], cur=first)
-        self._slots[slot] = st
-        self.stats.admitted += 1
-        self.stats.generated_tokens += 1
-        if self._used_before[slot]:
-            self.stats.slot_reuses += 1
-        self._used_before[slot] = True
-        events.append(StreamEvent(uid=st.uid, kind="token", slot=slot,
-                                  step=self._step_count, time_s=now,
-                                  user=st.user, token=first, index=0,
-                                  ttft_s=ttft))
-        if first == cfg.eos_id or st.max_new <= 1:
-            self._retire([slot], events, now)
+        retire: List[int] = []
+        for job in jobs:
+            st = _SlotState(uid=job.req.uid, user=job.req.user,
+                            seed=job.seed, prompt_len=job.plen,
+                            bucket=job.bucket,
+                            max_new=job.req.max_new_tokens,
+                            arrival_s=job.req.arrival_s,
+                            ttft_s=now - job.req.arrival_s,
+                            tokens=[job.first], cur=job.first)
+            self._slots[job.slot] = st
+            self.stats.admitted += 1
+            self.stats.generated_tokens += 1
+            if self._used_before[job.slot]:
+                self.stats.slot_reuses += 1
+            self._used_before[job.slot] = True
+            if job.hit is not None:
+                events.append(StreamEvent(
+                    uid=st.uid, kind="cache", slot=job.slot,
+                    step=self._step_count, time_s=now, user=st.user,
+                    hit_tokens=job.hit.length, prompt_tokens=job.plen,
+                    bytes_saved=job.hit.nbytes))
+            events.append(StreamEvent(uid=st.uid, kind="token",
+                                      slot=job.slot, step=self._step_count,
+                                      time_s=now, user=st.user,
+                                      token=job.first, index=0,
+                                      ttft_s=st.ttft_s))
+            if job.first == cfg.eos_id or st.max_new <= 1:
+                retire.append(job.slot)
+        if retire:
+            self._retire(retire, events, now)
+
+    def _admit_chunk(self, jobs: List[_AdmitJob], bucket: int) -> None:
+        """Prefill up to k same-bucket requests in ONE compiled program,
+        scatter their (prefix-loaded) caches into the rolling cache, and
+        feed each request's first-slab KV back into the trie."""
+        cfg = self.config
+        k = len(jobs)
+        toks = np.full((k, bucket), cfg.pad_id, np.int32)
+        suffix_lens = np.zeros((k,), np.int32)
+        plens = np.zeros((k,), np.int32)
+        seeds = np.zeros((k,), np.int32)
+        prefix_lens = np.zeros((k,), np.int32)
+        for r, job in enumerate(jobs):
+            hit_len = job.hit.length if job.hit is not None else 0
+            suffix = job.req.prompt[hit_len:]
+            toks[r, :len(suffix)] = suffix
+            suffix_lens[r] = len(suffix)
+            plens[r] = job.plen
+            seeds[r] = job.seed
+            prefix_lens[r] = hit_len
+        cachek = self.backend.init_cache(k, True)
+        fn = self._prefill_fns[(k, bucket)]
+        if self._slab:
+            leaves = [jnp.asarray(a) for a in self._assemble_prefix(jobs, k)]
+            cachek, sampled, rows = fn(
+                self.backend.params, cachek, jnp.asarray(toks),
+                jnp.asarray(suffix_lens), jnp.asarray(seeds), leaves,
+                jnp.asarray(prefix_lens))
+        else:
+            cachek, sampled, rows = fn(
+                self.backend.params, cachek, jnp.asarray(toks),
+                jnp.asarray(suffix_lens), jnp.asarray(seeds))
+        # gather BEFORE the (donating) slot write: the first `slab` KV rows
+        # of every admitted request, host-side, become trie payloads
+        gathered = None
+        if self.prefix is not None:
+            gathered = jax.device_get(self._gather_fns[k](cachek))
+        slots = np.asarray([j.slot for j in jobs], np.int32)
+        self._cache, self._table = self._write_fns[k](
+            self._cache, cachek, jnp.asarray(slots), jnp.asarray(plens),
+            self._table, rows)
+        sampled_np = np.asarray(jax.device_get(sampled))
+        for r, job in enumerate(jobs):
+            job.first = int(sampled_np[r])
+        if gathered is not None:
+            g_leaves = jax.tree_util.tree_leaves(gathered)
+            max_blocks = self._slab // cfg.prefix_block
+            for r, job in enumerate(jobs):
+                self.prefix.insert(
+                    job.req.prompt,
+                    lambda i, r=r: self._slice_block(g_leaves, r, i),
+                    max_blocks=max_blocks)
+        self.stats.prefill_calls += 1
+        if k > 1:
+            self.stats.batched_admissions += k
+
+    def _assemble_prefix(self, jobs: List[_AdmitJob],
+                         k: int) -> List[np.ndarray]:
+        """Pack each job's cached prefix blocks into fixed (k, slab) KV
+        slabs (one per cache leaf; rows past a job's prefix stay zero)."""
+        B = self.config.prefix_block
+        out = []
+        for shape, dtype, bax in zip(self._kv_shapes, self._kv_dtypes,
+                                     self._kv_batch_axes):
+            s = list(shape)
+            s[bax] = k
+            s[bax + 1] = self._slab
+            out.append(np.zeros(s, dtype))
+        for r, job in enumerate(jobs):
+            if job.hit is None:
+                continue
+            for i, blk in enumerate(job.hit.blocks):
+                for j, arr in enumerate(blk):
+                    bax = self._kv_batch_axes[j]
+                    idx = [slice(None)] * out[j].ndim
+                    idx[bax] = slice(r, r + 1)
+                    idx[bax + 1] = slice(i * B, (i + 1) * B)
+                    out[j][tuple(idx)] = arr
+        return out
+
+    def _slice_block(self, leaves: List[np.ndarray], r: int,
+                     i: int) -> List[np.ndarray]:
+        """Trie payload for request row r, block i: one `block`-row slice
+        per gathered cache leaf (batch dim kept at size 1)."""
+        B = self.config.prefix_block
+        out = []
+        for j, arr in enumerate(leaves):
+            bax = self._kv_batch_axes[j]
+            idx = [slice(None)] * arr.ndim
+            idx[bax] = slice(r, r + 1)
+            idx[bax + 1] = slice(i * B, (i + 1) * B)
+            out.append(np.ascontiguousarray(arr[tuple(idx)]))
+        return out
 
     def _retire(self, slots: List[int], events: List[StreamEvent],
                 now: float) -> None:
@@ -534,6 +833,10 @@ class ContinuousEngine:
         rolling population one token.  Returns the streamed events."""
         events: List[StreamEvent] = []
         self._admit(events)
+        if self.prefix is not None:
+            # ONE keyed stats fold per engine step carries every cache
+            # event this step produced (hits + inserts)
+            self.prefix.flush_stats()
         S = self.config.num_slots
         occupied = [i for i, s in enumerate(self._slots) if s is not None]
         if not occupied:

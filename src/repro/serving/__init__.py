@@ -27,10 +27,13 @@ from ..runtime.engine import (ContinuousEngine, EngineBackend, EngineStats,
                               StreamEvent, decode_metrics_init,
                               decode_metrics_plan, decode_metrics_step,
                               extract_metrics)
+from ..runtime.prefix_cache import (PrefixCache, PrefixCacheConfig,
+                                    PrefixCacheStats, PrefixHit)
 
 __all__ = [
     "BatcherStats", "ContinuousEngine", "DecodeBatch", "EngineBackend",
-    "EngineStats", "METRIC_COLS", "Request", "RequestBatcher",
+    "EngineStats", "METRIC_COLS", "PrefixCache", "PrefixCacheConfig",
+    "PrefixCacheStats", "PrefixHit", "Request", "RequestBatcher",
     "RequestResult", "ServeConfig", "StreamEvent", "WindowedMetrics",
     "build_engine", "build_serve_step", "decode_metrics_init",
     "decode_metrics_plan", "decode_metrics_step", "extract_metrics",

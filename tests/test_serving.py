@@ -225,8 +225,9 @@ class TestContinuousEngine:
 
     def test_recompile_count_bounded_by_bucket_ladder(self):
         """Zero recompilation beyond the declared ladder: one step program,
-        one slot-write program, one prefill program per bucket — over a
-        churny trace of mixed lengths, budgets, and slot handoffs."""
+        one slot-write/prefix-gather program per admission size k, one
+        prefill program per (k, bucket) — over a churny trace of mixed
+        lengths, budgets, and slot handoffs."""
         eng = toy_engine(num_slots=3, prefill_buckets=(2, 4, 8))
         rng = np.random.default_rng(0)
         for i in range(12):
@@ -237,10 +238,9 @@ class TestContinuousEngine:
         counts = eng.compile_counts()
         assert eng.stats.slot_reuses > 0
         assert counts["step"] == 1
-        assert counts["write_slot"] == 1
-        for b in (2, 4, 8):
-            assert counts[f"prefill_{b}"] <= 1
-        assert sum(counts.values()) <= 2 + len(eng.config.prefill_buckets)
+        for key, n in counts.items():
+            assert n <= 1, (key, n)
+        assert sum(counts.values()) <= eng.compile_bound()
 
     def test_fixed_trace_matches_solo(self):
         """Deterministic fallback for the hypothesis property below."""
@@ -312,13 +312,37 @@ class TestRealModelServing:
         drain(eng)
         assert eng.stats.slot_reuses >= 1
         counts = eng.compile_counts()
-        assert counts["step"] == 1 and counts["write_slot"] == 1
-        assert counts["prefill_8"] == 1
+        assert counts["step"] == 1 and counts["write_k1"] == 1
+        assert counts["prefill_k1_b8"] == 1
+        assert sum(counts.values()) <= eng.compile_bound()
         for p, uid in zip(prompts, uids):
             ref, got = self.solo(solo_engine, p), eng.result(uid)
             assert got.tokens == ref.tokens
             assert got.logprob_sum == ref.logprob_sum   # bitwise
             assert got.stopped == ref.stopped
+
+    def test_prefix_hit_bit_identical_to_cold(self, engine_factory):
+        """A real-model admission served from the prefix cache decodes
+        bit-identically to a cold prefill of the same prompt: RoPE keys KV
+        rows to absolute positions, so cached rows ARE recomputed rows."""
+        prompt = [5, 9, 2, 7, 11, 3]
+        warm = engine_factory(num_slots=1, prefill_buckets=(4, 8),
+                              prefix_block=2)
+        cold = engine_factory(num_slots=1, prefill_buckets=(4, 8),
+                              prefix_cache=False)
+        u1 = warm.submit(prompt)
+        drain(warm)
+        u2 = warm.submit(prompt)
+        drain(warm)
+        uc = cold.submit(prompt)
+        drain(cold)
+        assert warm.prefix is not None and warm.prefix.stats.hits == 1
+        ref = cold.result(uc)
+        for uid in (u1, u2):
+            got = warm.result(uid)
+            assert got.tokens == ref.tokens
+            assert got.logprob_sum == ref.logprob_sum   # bitwise
+        assert warm.result(u2).bucket == 4              # suffix bucket
 
     def test_run_batched_decode_shim(self, engine_factory, solo_engine):
         from repro.runtime import DecodeBatch

@@ -478,7 +478,8 @@ def test_windowed_metrics_consumes_engine_events():
     list(eng.run(max_steps=200))
     total_tokens = sum(len(eng.result(u).tokens) for u in uids.values())
     assert metrics.fleet_tokens() == total_tokens
-    assert metrics.events == total_tokens + len(uids)       # + done events
+    # + one "done" and one prefix-cache "cache" event per request
+    assert metrics.events == total_tokens + 2 * len(uids)
     assert metrics.users() == [0, 1]
     summary = metrics.summary(now=time.perf_counter())
     assert summary[0]["requests"] == 3 and summary[1]["requests"] == 2
